@@ -1,0 +1,148 @@
+"""Benchmarks reproducing every table/figure of the paper.
+
+Each function returns a list of CSV rows (name, us_per_call, derived);
+`derived` carries the figure's headline quantity so the run output is
+self-checking against the paper.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timeit(fn, repeat=3):
+    fn()  # warmup / construction cache
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn()
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return us, out
+
+
+def fig3_bandwidth():
+    """Fig. 3: cross-rack repair bandwidth for all code configs."""
+    from repro.core.analysis.bandwidth import fig3_rows
+
+    us, rows = _timeit(fig3_rows, repeat=1)
+    out = []
+    for r in rows:
+        out.append(
+            (
+                f"fig3/{r.label}",
+                us / len(rows),
+                f"cross_rack_blocks={r.cross_rack_blocks:.3f};overhead={r.storage_overhead:.2f}x",
+            )
+        )
+    return out
+
+
+def tables12_mttdl():
+    """Tables 1-2: MTTDL of flat vs hierarchical placement."""
+    from repro.core.analysis.reliability import table1_rows, table2_rows
+
+    us1, t1 = _timeit(table1_rows)
+    us2, t2 = _timeit(table2_rows)
+    rows = []
+    for i, m in enumerate(t1["mttf_years"]):
+        rows.append(
+            (
+                f"table1/mttf_{m}y",
+                us1 / 5,
+                f"flat={t1['flat_corr'][i]:.2e};hier={t1['hier_corr'][i]:.2e}",
+            )
+        )
+    for i, g in enumerate(t2["gamma_gbps"]):
+        rows.append(
+            (
+                f"table2/gamma_{g}gbps",
+                us2 / 4,
+                f"flat={t2['flat_corr'][i]:.2e};hier={t2['hier_corr'][i]:.2e}",
+            )
+        )
+    return rows
+
+
+def table3_breakdown():
+    """Table 3: single-block repair time decomposition."""
+    from repro.core.codes import make_code
+    from repro.storage import ClusterSim
+
+    sim = ClusterSim()
+    rows = []
+    for label, (n, k, r), bm in [
+        ("DRC(9,6,3)", (9, 6, 3), 63.0),
+        ("DRC(9,5,3)", (9, 5, 3), 64.0),
+    ]:
+        code = make_code("DRC", n, k, r)
+        us, d = _timeit(lambda c=code, b=bm: sim.table3_breakdown(c, b))
+        derived = ";".join(f"{k2}={v:.3f}s" for k2, v in d.items())
+        rows.append((f"table3/{label}", us, derived))
+    return rows
+
+
+def fig6_recovery():
+    """Fig. 6: node-recovery throughput vs gateway bandwidth."""
+    from repro.core.codes import make_code
+    from repro.storage import ClusterSim
+
+    sim = ClusterSim()
+    codes = [
+        ("RS", 9, 6, 3), ("MSR", 9, 6, 3), ("DRC", 9, 6, 3),
+        ("RS", 9, 5, 3), ("DRC", 9, 5, 3),
+        ("RS", 6, 3, 3), ("MSR", 6, 3, 3), ("DRC", 6, 3, 3),
+        ("RS", 6, 4, 3), ("MSR", 6, 4, 3), ("DRC", 6, 4, 3),
+        ("RS", 8, 6, 4), ("DRC", 8, 6, 4),
+    ]
+    rows = []
+    for fam, n, k, r in codes:
+        code = make_code(fam, n, k, r)
+        for g in (0.2, 0.5, 1.0, 2.0):
+            us, tput = _timeit(
+                lambda c=code, gg=g: sim.node_recovery_throughput(c, gateway_gbps=gg)
+            )
+            rows.append(
+                (f"fig6/{fam}({n},{k},{r})@{g}Gbps", us, f"recovery_mib_s={tput:.1f}")
+            )
+    return rows
+
+
+def fig7_degraded_read():
+    """Fig. 7: degraded read latency vs gateway bandwidth."""
+    from repro.core.codes import make_code
+    from repro.storage import ClusterSim
+
+    sim = ClusterSim()
+    rows = []
+    for fam, n, k, r in [
+        ("RS", 9, 5, 3), ("DRC", 9, 5, 3), ("RS", 9, 6, 3), ("DRC", 9, 6, 3),
+        ("MSR", 6, 3, 3), ("DRC", 6, 3, 3),
+    ]:
+        code = make_code(fam, n, k, r)
+        for g in (0.2, 0.5, 1.0, 2.0):
+            us, t = _timeit(
+                lambda c=code, gg=g: sim.degraded_read_time(c, gateway_gbps=gg)
+            )
+            rows.append(
+                (f"fig7/{fam}({n},{k},{r})@{g}Gbps", us, f"degraded_read_s={t:.3f}")
+            )
+    return rows
+
+
+def fig8_strip_block():
+    """Fig. 8: strip-size and block-size sensitivity."""
+    from repro.core.codes import make_code
+    from repro.storage import ClusterSim
+
+    sim = ClusterSim()
+    code = make_code("DRC", 9, 5, 3)
+    rows = []
+    for strip in (1, 8, 64, 256, 2048, 16384):
+        us, tput = _timeit(
+            lambda s=strip: sim.node_recovery_throughput(code, strip_kib=s)
+        )
+        rows.append((f"fig8a/strip_{strip}KiB", us, f"recovery_mib_s={tput:.1f}"))
+    for block in (1, 4, 16, 64, 256):
+        us, tput = _timeit(
+            lambda b=block: sim.node_recovery_throughput(code, block_mib=b)
+        )
+        rows.append((f"fig8b/block_{block}MiB", us, f"recovery_mib_s={tput:.1f}"))
+    return rows

@@ -1,0 +1,112 @@
+"""Roofline reader: aggregates the probe artifacts (loop-corrected cost
+terms) and the dry-run artifacts (memory/compile proof) into the
+§Roofline table, plus the repair-layering collective-bytes comparison.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+PROBE = os.environ.get("ROOFLINE_ARTIFACTS", "artifacts/roofline")
+
+
+def roofline_rows():
+    rows = []
+    mem = {}
+    for path in glob.glob(os.path.join(ART, "*.json")):
+        if path.endswith("summary.json"):
+            continue
+        with open(path) as f:
+            res = json.load(f)
+        if res.get("status") == "ok" and res.get("mesh") == "single":
+            mem[(res["arch"], res["shape"])] = res["memory"][
+                "per_device_total_gib"
+            ]
+    for path in sorted(glob.glob(os.path.join(PROBE, "*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        tag = f"{res['arch']}/{res['shape']}"
+        if res.get("status") != "ok":
+            rows.append((f"roofline/{tag}", 0.0, f"status={res.get('status')}"))
+            continue
+        r = res["roofline"]
+        rows.append(
+            (
+                f"roofline/{tag}",
+                0.0,
+                (
+                    f"bottleneck={r['bottleneck']};compute={r['compute_s']:.4f}s;"
+                    f"memory={r['memory_s']:.4f}s;collective={r['collective_s']:.4f}s;"
+                    f"useful_flops={r['useful_flops_ratio']:.2f};"
+                    f"mem_gib={mem.get((res['arch'], res['shape']), 'n/a')}"
+                ),
+            )
+        )
+    # long_500k skips for pure full-attention archs (recorded in dryrun)
+    for path in sorted(glob.glob(os.path.join(ART, "*long_500k*single*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        if res.get("status") == "skipped":
+            rows.append(
+                (
+                    f"roofline/{res['arch']}/long_500k",
+                    0.0,
+                    "skipped=full-attention arch (sub-quadratic decode required)",
+                )
+            )
+    return rows
+
+
+def repair_collectives():
+    """Lower the layered-repair SPMD program per code and compare the
+    HLO cross-pod collective bytes against the plan's Eq.(3) accounting."""
+    import subprocess
+    import sys
+
+    script = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=9'
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.core.codes import make_code
+from repro.dist.collectives import plan_to_spmd, make_spmd_repair
+from repro.launch.hlo_analysis import parse_collectives
+from jax.sharding import PartitionSpec as P
+mesh = jax.make_mesh((3,3), ('pod','node'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+out = []
+SUB = 1 << 20
+for fam, n, k, r in [('RS',9,6,3), ('MSR',9,6,3), ('DRC',9,6,3), ('RS',9,5,3), ('DRC',9,5,3)]:
+    code = make_code(fam, n, k, r)
+    plan = code.repair_plan(0)
+    spec = plan_to_spmd(code, plan)
+    fn = jax.shard_map(make_spmd_repair(spec), mesh=mesh,
+                       in_specs=P(('pod','node')), out_specs=P(('pod','node')))
+    comp = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((code.n, code.alpha, SUB), jnp.uint8)).compile()
+    st = parse_collectives(comp.as_text())
+    cross = st.bytes_by_op.get('collective-permute', 0) / (code.alpha * SUB)
+    plan_cross = plan.traffic_blocks()['cross_rack_blocks']
+    out.append((f'{fam}({n},{k},{r})', cross, plan_cross))
+print(json.dumps(out))
+"""
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        timeout=900,
+    )
+    rows = []
+    if proc.returncode != 0:
+        return [("repair_hlo/error", 0.0, proc.stderr.strip().splitlines()[-1][:80])]
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    for label, hlo_cross, plan_cross in data:
+        rows.append(
+            (
+                f"repair_hlo/{label}",
+                0.0,
+                f"hlo_cross_blocks={hlo_cross:.2f};plan_cross_blocks={plan_cross:.2f}",
+            )
+        )
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark driver: one function per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6 fig7 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import kernels_bench, paper_tables, roofline
+
+SUITES = {
+    "fig3": paper_tables.fig3_bandwidth,
+    "tables12": paper_tables.tables12_mttdl,
+    "table3": paper_tables.table3_breakdown,
+    "fig6": paper_tables.fig6_recovery,
+    "fig7": paper_tables.fig7_degraded_read,
+    "fig8": paper_tables.fig8_strip_block,
+    "kernels": kernels_bench.gf_matmul_bench,
+    "flash": kernels_bench.flash_attention_bench,
+    "plans": kernels_bench.repair_plan_bench,
+    "checkpoint": kernels_bench.checkpoint_bench,
+    "roofline": roofline.roofline_rows,
+    "repair_hlo": roofline.repair_collectives,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="+", default=None, choices=list(SUITES))
+    args = ap.parse_args(argv)
+    names = args.only or list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            for row, us, derived in SUITES[name]():
+                print(f"{row},{us:.1f},{derived}")
+        except Exception:  # keep the suite running; report at the end
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

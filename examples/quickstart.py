@@ -1,0 +1,57 @@
+"""Quickstart: the paper's repair layering in five minutes.
+
+1. Encode a stripe with DRC(9,6,3) (hierarchical placement, 3 racks).
+2. Kill a node; repair it with the layered plan and inspect the
+   inner-rack vs cross-rack traffic (Eq. (3): 2 blocks for (9,6,3)).
+3. Compare against RS and MSR on the same stripe.
+4. Erasure-code a (tiny) training state and restore it with one shard
+   missing — the framework-integration path.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.codes import make_code
+from repro.train.checkpoint import encode_state, restore_state
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("== 1. DRC(9,6,3): encode a stripe ==")
+    code = make_code("DRC", 9, 6, 3)
+    data = rng.integers(0, 256, size=(code.k * code.alpha, 1 << 16), dtype=np.uint8)
+    payloads = dict(enumerate(code.encode(data)))
+    print(f"  {code}: {code.n} blocks x {data.shape[1] * code.alpha / 2**10:.0f} KiB "
+          f"over {code.r} racks ({code.placement.nodes_per_rack}/rack)")
+
+    print("== 2. repair node 0 (degraded read) ==")
+    plan = code.repair_plan(0)
+    repaired = plan.execute({i: p for i, p in payloads.items() if i != 0})
+    assert np.array_equal(repaired, payloads[0])
+    t = plan.traffic_blocks()
+    print(f"  exact repair OK; cross-rack={t['cross_rack_blocks']:.2f} blocks "
+          f"(Eq.3 minimum), inner-rack={t['inner_rack_blocks']:.2f} blocks")
+    print(f"  relayers: {plan.relayers} "
+          f"(each ships {list(t['per_relayer_cross'].values())[0]:.2f} blocks)")
+
+    print("== 3. the same repair under RS / MSR ==")
+    for fam in ("RS", "MSR"):
+        c = make_code(fam, 9, 6, 3)
+        tt = c.repair_plan(0).traffic_blocks()
+        print(f"  {c}: cross-rack={tt['cross_rack_blocks']:.2f} blocks")
+
+    print("== 4. erasure-coded training state ==")
+    state = {"w": jax.random.normal(jax.random.key(0), (256, 256), jnp.float32)}
+    ckpt = encode_state(state, family="DRC", n=9, k=6, r=3)
+    got, report = restore_state(ckpt, state, available=set(range(1, 9)))
+    assert np.allclose(np.asarray(got["w"]), np.asarray(state["w"]))
+    print(f"  restored with node 0 missing: mode={report.mode}, "
+          f"cross-rack={report.cross_rack_blocks:.2f} blocks")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Repair layering walk-through (paper §2.2 Fig. 1 + §3.2 Fig. 2).
+
+Reproduces the motivating example: repairing one block of a (6,3) stripe
+under (a) MSR flat placement, (b) MSR hierarchical placement, (c) DRC —
+showing the cross-rack bandwidth dropping 5B/3 -> 4B/3 -> B, then prints
+the per-stage DoubleR workflow (NodeEncode / RelayerEncode / Decode) of
+the DRC plan and the simulated recovery numbers of §6.
+
+Run:  PYTHONPATH=src python examples/repair_layering_demo.py
+"""
+import numpy as np
+
+from repro.core.codes import make_code
+from repro.core.repair import TARGET
+from repro.storage import ClusterSim
+
+
+def main():
+    print("== paper §3.2 motivating example (B = 1 block) ==")
+    for fam, n, k, r in [("MSR", 6, 3, 6), ("MSR", 6, 3, 3), ("DRC", 6, 3, 3)]:
+        code = make_code(fam, n, k, r)
+        t = code.repair_plan(0).traffic_blocks()
+        tag = f"{fam}({n},{k},{r})"
+        print(f"  {tag:12s} cross-rack bandwidth = {t['cross_rack_blocks']:.3f} B")
+
+    print("\n== DoubleR workflow for DRC(9,6,3), failed node N1 ==")
+    code = make_code("DRC", 9, 6, 3)
+    plan = code.repair_plan(0)
+    pl = plan.placement
+    for s in plan.node_sends:
+        dst = "target" if s.dst == TARGET else f"relayer N{s.dst + 1}"
+        kind = "raw subblocks" if np.all(
+            (s.matrix.sum(1) == 1) & (s.matrix.max(1) == 1)
+        ) else "encoded subblocks (NodeEncode)"
+        print(f"  N{s.src + 1} (rack {pl.rack_of(s.src)}) -> {dst}: "
+              f"{s.units} x B/{plan.alpha} {kind}")
+    for s in plan.relayer_sends:
+        print(f"  N{s.src + 1} (rack {pl.rack_of(s.src)}) == RelayerEncode ==> "
+              f"target: {s.units} x B/{plan.alpha} re-encoded subblocks [cross-rack]")
+    print(f"  target: Decode({plan.decode.shape[1]} units) -> block N1")
+
+    print("\n== §6 testbed simulation (64 MiB blocks, 1 Gb/s gateway) ==")
+    sim = ClusterSim()
+    for fam, n, k, r in [("RS", 9, 5, 3), ("DRC", 9, 5, 3)]:
+        code = make_code(fam, n, k, r)
+        tput = sim.node_recovery_throughput(code, gateway_gbps=1.0)
+        dr = sim.degraded_read_time(code, gateway_gbps=1.0)
+        print(f"  {fam}({n},{k},{r}): recovery {tput:6.1f} MiB/s, "
+              f"degraded read {dr:.2f} s")
+    print("demo OK")
+
+
+if __name__ == "__main__":
+    main()

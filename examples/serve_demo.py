@@ -1,0 +1,43 @@
+"""Batched serving demo: prefill a batch of prompts, decode new tokens.
+
+Uses the xlstm-125m smoke config (O(1)-per-token state) and a GQA
+transformer side by side to show the unified decode-state API.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import backbone
+from repro.serve import ServeEngine
+
+
+def run(arch: str, batch=4, prompt_len=16, gen=24):
+    cfg = get_smoke(arch)
+    params, _ = backbone.init_model(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, batch=batch, kv_len=prompt_len + gen + 8)
+    prompts = jax.random.randint(
+        jax.random.key(1), (batch, prompt_len), 0, cfg.vocab
+    ).astype(jnp.int32)
+    t0 = time.time()
+    eng.prefill(prompts)
+    t1 = time.time()
+    toks = eng.generate(gen, temperature=0.8)
+    t2 = time.time()
+    print(f"[serve] {arch}: prefill {batch}x{prompt_len} in {t1-t0:.2f}s; "
+          f"generated {batch}x{gen} tokens in {t2-t1:.2f}s "
+          f"({batch*gen/(t2-t1):.0f} tok/s)")
+    print(f"[serve]   sample continuation: {toks[0, :12].tolist()}")
+
+
+def main():
+    for arch in ("xlstm_125m", "starcoder2_3b", "zamba2_1p2b"):
+        run(arch)
+    print("serve demo OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""End-to-end training driver with erasure-coded fault tolerance.
+
+Trains a ~25M-parameter minicpm-family model on the synthetic stream,
+checkpoints the full training state with DRC(9,6,3) every N steps, then
+*kills a checkpoint shard mid-run* and restarts from the damaged
+checkpoint — the restore runs the paper's layered repair (degraded
+read) and training continues bit-exactly.
+
+Defaults are CPU-sized (~3 min).  Scale up with:
+  --d-model 768 --layers 12 --steps 300      (~100M-class)
+
+Run:  PYTHONPATH=src python examples/train_e2e.py
+"""
+import argparse
+import dataclasses
+import os
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.train import (
+    AdamWConfig,
+    DataConfig,
+    ScheduleConfig,
+    SyntheticStream,
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+)
+from repro.train.checkpoint import CheckpointManager
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_smoke("minicpm_2b"),
+        name="minicpm-e2e",
+        d_model=args.d_model,
+        n_layers=args.layers,
+        n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(4, args.d_model // 64),
+        d_ff=args.d_model * 3,
+        vocab=8192,
+    )
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(),
+        schedule=ScheduleConfig(kind="wsd", peak_lr=1e-3,
+                                total_steps=args.steps, warmup_steps=5),
+    )
+    params, opt, _ = init_train_state(jax.random.key(0), cfg, tcfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[e2e] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    mgr = CheckpointManager(args.ckpt_dir, family="DRC", n=9, k=6, r=3)
+    stream = SyntheticStream(cfg, DataConfig(batch=args.batch, seq=args.seq))
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+    losses = []
+    crash_at = args.steps // 2
+    crashed = False
+    step = 0
+    while step < args.steps:
+        batch = stream.batch_at(step)
+        params, opt, m = step_fn(params, opt, batch, step)
+        losses.append(float(m["loss"]))
+        if step % 10 == 0:
+            print(f"[e2e] step={step:3d} loss={losses[-1]:.4f}")
+        step += 1
+        if step % args.ckpt_every == 0:
+            mgr.save(step, {"params": params, "opt": opt})
+        if step == crash_at and not crashed:
+            crashed = True
+            # ----- simulated node failure -----
+            last = mgr.steps()[-1]
+            victim = os.path.join(mgr._stepdir(last), "node_2.bin")
+            os.remove(victim)
+            print(f"[e2e] 💥 killed checkpoint shard node_2 of step {last}; "
+                  f"restarting from damaged checkpoint")
+            state = {"params": params, "opt": opt}
+            state, step, report = mgr.load(state)
+            params, opt = state["params"], state["opt"]
+            print(f"[e2e] restored via {report.mode} "
+                  f"(cross-rack={report.cross_rack_blocks:.1f} blocks); "
+                  f"resuming at step {step}")
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], "loss did not improve"
+    print(f"[e2e] done: loss {losses[0]:.4f} -> {losses[-1]:.4f} OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each module defines `CONFIG` (the exact published configuration) and
+`smoke()` (a reduced same-family config for CPU tests).  `input_specs`
+builds the ShapeDtypeStruct stand-ins for every (arch × shape) dry-run
+cell without allocating anything.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+
+ARCHS = [
+    "command_r_35b",
+    "minicpm_2b",
+    "starcoder2_7b",
+    "starcoder2_3b",
+    "xlstm_125m",
+    "internvl2_1b",
+    "dbrx_132b",
+    "grok_1_314b",
+    "whisper_small",
+    "zamba2_1p2b",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({
+    "command-r-35b": "command_r_35b",
+    "minicpm-2b": "minicpm_2b",
+    "starcoder2-7b": "starcoder2_7b",
+    "starcoder2-3b": "starcoder2_3b",
+    "xlstm-125m": "xlstm_125m",
+    "internvl2-1b": "internvl2_1b",
+    "dbrx-132b": "dbrx_132b",
+    "grok-1-314b": "grok_1_314b",
+    "whisper-small": "whisper_small",
+    "zamba2-1.2b": "zamba2_1p2b",
+})
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_ALIAS.get(name, name)}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_ALIAS.get(name, name)}")
+    return mod.smoke()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def applicable_shapes(cfg: ArchConfig) -> list[str]:
+    """Which of the four shape cells an architecture runs.
+
+    long_500k needs a sub-quadratic decode path (SSM/hybrid); pure
+    full-attention archs skip it (recorded as skips in EXPERIMENTS.md).
+    """
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        shapes.append("long_500k")
+    return shapes
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str, *, for_train: bool = None):
+    """ShapeDtypeStruct stand-ins for one dry-run cell (no allocation)."""
+    import jax
+    import jax.numpy as jnp
+
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: dict = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = s
+        if cfg.family == "vlm" and cfg.vision_tokens:
+            s_text = s - cfg.vision_tokens
+            batch["vis_embeds"] = sds((b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sds((b, s_text), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), jnp.int32)
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    else:  # decode: one new token against a kv_len = seq cache
+        batch["tokens"] = sds((b, 1), jnp.int32)
+    return batch

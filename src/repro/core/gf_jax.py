@@ -1,0 +1,81 @@
+"""GF(2^8) data-path operations in JAX.
+
+Plan-time linear algebra lives in `repro.core.gf` (numpy).  This module
+executes the resulting matrices against real payload bytes as jitted JAX ops.
+Two interchangeable execution paths:
+
+* ``gf_matmul_jnp`` — pure-jnp mul-table gather + XOR reduce (oracle; runs
+  everywhere, used by tests and small payloads).
+* ``repro.kernels.ops.gf_matmul`` — Pallas TPU kernel (bitplane MXU matmul);
+  validated against this module in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gf as _gf
+
+# Device-resident constant tables.
+MUL_TABLE = jnp.asarray(_gf.GF_MUL_TABLE)  # (256,256) uint8
+
+
+@jax.jit
+def gf_mul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Element-wise GF(256) product of uint8 arrays (broadcasting)."""
+    a = a.astype(jnp.uint8)
+    b = b.astype(jnp.uint8)
+    return MUL_TABLE[a.astype(jnp.int32), b.astype(jnp.int32)]
+
+
+@jax.jit
+def gf_matmul_jnp(m: jax.Array, x: jax.Array) -> jax.Array:
+    """GF(256) matrix product (rows, k) @ (k, payload) -> (rows, payload).
+
+    XOR-accumulated table products via one gather:
+      prod[r, j, p] = table[m[r, j], x[j, p]]; out[r, p] = XOR_j prod[r, j, p].
+
+    XOR-reduce is expressed as a loop of jnp.bitwise_xor.reduce over axis 1.
+    """
+    m = m.astype(jnp.int32)
+    x = x.astype(jnp.int32)
+    prod = MUL_TABLE[m[:, :, None], x[None, :, :]]  # (rows, k, payload) uint8
+    return jax.lax.reduce(
+        prod,
+        jnp.uint8(0),
+        lambda a, b: jnp.bitwise_xor(a, b),
+        dimensions=(1,),
+    )
+
+
+def gf_matvec_bytes(m: np.ndarray | jax.Array, x: jax.Array) -> jax.Array:
+    """Apply a plan-time GF matrix to stacked byte payloads.
+
+    x: (k, payload_bytes) uint8; m: (rows, k) uint8 -> (rows, payload_bytes).
+    """
+    m = jnp.asarray(np.asarray(m, dtype=np.uint8))
+    return gf_matmul_jnp(m, x)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def xor_reduce(x: jax.Array, axis: int = 0) -> jax.Array:
+    return jax.lax.reduce(
+        x, jnp.uint8(0), lambda a, b: jnp.bitwise_xor(a, b), dimensions=(axis,)
+    )
+
+
+def bytes_to_bits(x: jax.Array) -> jax.Array:
+    """Unpack uint8 (..., B) -> uint8 bits (..., 8, B), LSB first."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return (x[..., None, :] >> shifts[:, None]) & jnp.uint8(1)
+
+
+def bits_to_bytes(bits: jax.Array) -> jax.Array:
+    """Pack uint8 bits (..., 8, B) (LSB first) -> uint8 (..., B)."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(
+        (bits.astype(jnp.uint8) & 1) << shifts[:, None], axis=-2, dtype=jnp.uint8
+    )

@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention (forward) — the serving-path hot spot.
+
+Grid: (batch·kv_heads·groups, q_blocks, kv_blocks); the kv axis is the
+innermost (sequential on TPU), so the running (max, sum, acc) state lives
+in VMEM scratch across kv steps and is finalized on the last block.
+Blocks are MXU-aligned (q_block × head_dim and kv_block × head_dim tiles);
+causal masking skips fully-masked kv blocks via `pl.when`.
+
+The pure-JAX `_chunked_attention` in models/attention.py remains the
+training path (it differentiates through `jax.checkpoint`); this kernel
+targets prefill/decode where the forward pass dominates.  Validated in
+interpret mode against `ref.py`'s oracle over shape sweeps
+(tests/test_kernels.py::test_flash_*).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, causal: bool, scale: float
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    bq = q_ref.shape[0]
+    bk = k_ref.shape[0]
+    run = True
+    if causal:
+        # q block rows span [qi*bq, (qi+1)*bq); kv block cols similar —
+        # skip blocks strictly above the diagonal
+        run = (ki * bk) <= (qi * bq + bq - 1)
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[...].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[...].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        v = v_ref[...].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[...] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, kvH, D) -> (B, Sq, H, D).
+
+    GQA is handled in the BlockSpec index map (q head hi reads kv head
+    hi // (H/kvH)) — repeated K/V never materializes.
+    Sq % block_q == 0 and Sk % block_k == 0 (pad upstream).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    groups = h // kvh  # GQA: q head hi reads kv head hi // groups
+    scale = 1.0 / math.sqrt(d)
+    qg = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, d)
+    nq = sq // block_q
+    nk = sk // block_k
+
+    def kv_map(g, i, j):
+        # grid head-slot g = bi*h + hi  ->  kv slot bi*kvh + hi // groups
+        return ((g // h) * kvh + (g % h) // groups, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, scale=scale),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((None, block_k, d), kv_map),
+            pl.BlockSpec((None, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

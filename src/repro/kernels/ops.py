@@ -1,0 +1,91 @@
+"""Jitted public wrapper around the Pallas GF(2^8) matmul kernel.
+
+``gf_matmul(m, x)`` is the one entry point the rest of the framework uses
+(checkpoint encode/repair, the storage simulator's compute model, the
+benchmarks).  It
+
+* bit-expands the GF(256) coding matrix host-side (cached by content),
+* pads the payload byte axis to the chosen lane-aligned tile,
+* dispatches the Pallas kernel (interpret=True automatically off-TPU),
+* falls back to the pure-jnp oracle for payloads too small to tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf as _gf
+from .gf_matmul import gf_matmul_pallas
+from .ref import gf_matmul_ref
+
+_LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=4096)
+def _bitmatrix_cached(key: bytes, shape: tuple[int, int]) -> np.ndarray:
+    m = np.frombuffer(key, dtype=np.uint8).reshape(shape)
+    return _gf.gf_matrix_to_bitmatrix(m).astype(np.int8)
+
+
+def bit_expand(m: np.ndarray) -> np.ndarray:
+    """(R, K) GF(256) matrix -> (8R, 8K) int8 GF(2) bit-matrix (cached)."""
+    m = np.ascontiguousarray(np.asarray(m, dtype=np.uint8))
+    return _bitmatrix_cached(m.tobytes(), m.shape)
+
+
+def choose_block_b(k: int, r: int, vmem_budget: int = 8 * 2**20) -> int:
+    """Largest lane-aligned payload tile fitting the VMEM budget.
+
+    Working set per step ≈ bitplanes (8K·tb) + packed in (K·tb) + packed
+    out (R·tb) + int32 accumulator (4·8R·tb) bytes + resident matrix.
+    """
+    per_byte = 8 * k + k + r + 32 * r
+    fixed = 64 * r * k
+    tb = max(_LANE, ((vmem_budget - fixed) // per_byte) // _LANE * _LANE)
+    return int(min(tb, 4096))
+
+
+def gf_matmul(
+    m: np.ndarray | jax.Array,
+    x: jax.Array,
+    *,
+    block_b: int | None = None,
+    force_kernel: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GF(256) coding product: (R, K) @ (K, B) -> (R, B) uint8."""
+    m_np = np.asarray(m, dtype=np.uint8)
+    r, k = m_np.shape
+    x = jnp.asarray(x, dtype=jnp.uint8)
+    if x.ndim != 2 or x.shape[0] != k:
+        raise ValueError(f"payload {x.shape} does not match matrix {m_np.shape}")
+    b = x.shape[1]
+    if interpret is None:
+        interpret = not _on_tpu()
+    # Off-TPU the Pallas kernel runs in (slow, python-level) interpret
+    # mode — it exists for correctness validation; the log/exp oracle is
+    # the fast CPU path.  On TPU the kernel is the fast path.
+    if (b < _LANE or not _on_tpu()) and not force_kernel:
+        return gf_matmul_ref(jnp.asarray(m_np), x)
+    tb = block_b or choose_block_b(k, r)
+    tb = min(tb, max(_LANE, (b // _LANE) * _LANE))
+    pad = (-b) % tb
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    mb = jnp.asarray(bit_expand(m_np))
+    y = gf_matmul_pallas(mb, x, block_b=tb, interpret=interpret)
+    return y[:, :b] if pad else y
+
+
+def encode_payload(generator: np.ndarray, data: jax.Array) -> jax.Array:
+    """Systematic encode: only compute the parity rows on the data path."""
+    ka = generator.shape[1]
+    parity = gf_matmul(generator[ka:], data)
+    return jnp.concatenate([data, parity], axis=0)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the GF(2^8) matmul kernel (log/exp table path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.gf_jax import gf_matmul_jnp
+
+
+def gf_matmul_ref(m: jax.Array, x: jax.Array) -> jax.Array:
+    """Reference GF(256) product: (R, K) x (K, B) -> (R, B), all uint8."""
+    return gf_matmul_jnp(m, x)

@@ -1,0 +1,126 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Largest-buffer forensics for a dry-run cell (perf-iteration tool).
+
+Prints the biggest per-device HLO buffers grouped by (shape, op) — the
+first stop when a cell's memory_analysis exceeds the 16 GiB v5e budget.
+
+  PYTHONPATH=src python -m repro.launch.buffers --arch grok-1-314b \
+      --shape train_4k --rules fsdp_sp --microbatches 4
+"""
+import argparse
+import re
+from collections import Counter
+
+import numpy as np
+
+_BY = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+       "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_PAT = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]+)\]")
+
+
+def top_buffers(hlo_text: str, min_bytes: int = 2**27, top: int = 20):
+    agg = Counter()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        m = _PAT.match(rhs)
+        if not m:
+            continue
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * _BY[dt]
+        if b >= min_bytes:
+            op = rhs.split("(")[0].split()[-1]
+            agg[(f"{dt}[{dims}]", op, b)] += 1
+    rows = sorted(agg.items(), key=lambda kv: -kv[0][2] * kv[1])[:top]
+    return [
+        {"shape": s, "op": op, "gib": round(b / 2**30, 3), "count": c,
+         "total_gib": round(b * c / 2**30, 2)}
+        for (s, op, b), c in rows
+    ]
+
+
+def main():
+    from repro.launch import dryrun as dr
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--rules", default="tp_sp")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--accum-dtype", default="float32")
+    args = ap.parse_args()
+
+    # monkey-patch run_cell's compile step to capture hlo? simpler: rebuild
+    import jax
+
+    from repro.configs import get_config, input_specs
+    from repro.dist.sharding import axis_rules, make_rules
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES
+    from repro.train import TrainConfig, make_train_step
+    from repro.train.optimizer import AdamWConfig, opt_state_axes
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    rules = make_rules(args.rules, multi_pod=args.mesh == "multi")
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(state_dtype=cfg.opt_state_dtype),
+        microbatches=args.microbatches,
+        accum_dtype=args.accum_dtype,
+    )
+    batch_shapes = input_specs(cfg, shape)
+    with axis_rules(rules), jax.set_mesh(mesh):
+        if shape.kind == "train":
+            pshapes, oshapes, paxes = dr.abstract_train_state(cfg, tcfg)
+            p_sh = dr._named(mesh, paxes, pshapes)
+            o_sh = dr._named(mesh, opt_state_axes(paxes), oshapes)
+            b_sh = dr._named(mesh, dr._batch_axes(batch_shapes), batch_shapes)
+            jitted = jax.jit(
+                make_train_step(cfg, tcfg),
+                in_shardings=(p_sh, o_sh, b_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            comp = jitted.lower(
+                pshapes, oshapes, batch_shapes,
+                jax.ShapeDtypeStruct((), jax.numpy.int32),
+            ).compile()
+        else:
+            from repro.serve.serve_step import make_decode_step
+            from repro.models.common import spec as axspec
+
+            pshapes, _, paxes = dr.abstract_train_state(cfg, tcfg)
+            p_sh = dr._named(mesh, paxes, pshapes)
+            sshapes, saxes = dr.abstract_decode_state(
+                cfg, shape.global_batch, shape.seq_len
+            )
+            s_sh = dr._named(mesh, saxes, sshapes)
+            tok_sh = dr._named(
+                mesh, {"t": axspec("batch", None)},
+                {"t": batch_shapes["tokens"]},
+            )["t"]
+            jitted = jax.jit(
+                make_decode_step(cfg),
+                in_shardings=(p_sh, s_sh, tok_sh, None),
+                out_shardings=(None, s_sh),
+                donate_argnums=(1,),
+            )
+            comp = jitted.lower(
+                pshapes, sshapes, batch_shapes["tokens"],
+                jax.ShapeDtypeStruct((), jax.numpy.int32),
+            ).compile()
+    for row in top_buffers(comp.as_text()):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile one (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+``jax.jit(step).lower(*ShapeDtypeStructs).compile()`` must succeed on
+the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh for every
+assigned (architecture × input shape); ``memory_analysis()`` proves it
+fits, ``cost_analysis()`` + the parsed collective schedule feed the
+roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Nothing is allocated: parameters, optimizer state, KV caches and batches
+are all ShapeDtypeStruct stand-ins (abstract init via jax.eval_shape).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b \
+      --shape train_4k --mesh single --rules tp_sp --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import applicable_shapes, get_config, input_specs
+from repro.dist.sharding import axis_rules, make_rules, resolve_specs
+from repro.launch.hlo_analysis import roofline_from
+from repro.launch.mesh import make_production_mesh
+from repro.models import backbone
+from repro.models.common import AxisSpec
+from repro.models.common import spec as axspec
+from repro.models.config import SHAPES, ArchConfig
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train import TrainConfig, make_train_step
+from repro.train.optimizer import init_opt_state, opt_state_axes
+
+
+def model_flops_global(cfg: ArchConfig, shape, kind: str) -> float:
+    n_active = cfg.active_params()
+    if kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one new token
+
+
+def abstract_train_state(cfg: ArchConfig, tcfg: TrainConfig):
+    cap = {}
+
+    def initp(key):
+        p, axes = backbone.init_model(key, cfg)
+        cap["axes"] = axes
+        return p, init_opt_state(p, tcfg.optimizer)
+
+    pshapes, oshapes = jax.eval_shape(initp, jax.random.key(0))
+    return pshapes, oshapes, cap["axes"]
+
+
+def abstract_decode_state(cfg: ArchConfig, batch: int, kv_len: int):
+    cap = {}
+
+    def inits():
+        st, axes = backbone.init_decode_state(cfg, batch, kv_len)
+        cap["axes"] = axes
+        return st
+
+    sshapes = jax.eval_shape(inits)
+    return sshapes, cap["axes"]
+
+
+def _specs(mesh, spec_tree, shape_tree):
+    return resolve_specs(spec_tree, shape_tree, mesh)
+
+
+def _named(mesh, spec_tree, shape_tree):
+    specs = _specs(mesh, spec_tree, shape_tree)
+    return jax.tree.map(
+        lambda s: jax.NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def _batch_axes(batch):
+    out = {}
+    for k in batch:
+        if k in ("tokens", "labels"):
+            out[k] = axspec("batch", None)
+        else:  # vis_embeds / frames
+            out[k] = axspec("batch", None, "embed")
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules_mode: str = "tp_sp",
+    microbatches: int = 1,
+    attn_chunk: int = 512,
+    remat: str | None = None,
+    opt_dtype: str | None = None,
+    accum_dtype: str = "float32",
+    verbose: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "rules": rules_mode,
+        "microbatches": microbatches,
+        "attn_chunk": attn_chunk,
+        "remat": cfg.remat,
+        "params_b": round(cfg.params_billions, 3),
+        "active_params_b": round(cfg.active_params() / 1e9, 3),
+    }
+    if shape_name not in applicable_shapes(cfg):
+        result.update(
+            status="skipped",
+            reason="pure full-attention arch: long_500k needs sub-quadratic decode",
+        )
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(rules_mode, multi_pod=multi_pod)
+    result["n_devices"] = mesh.size
+    t0 = time.time()
+
+    from repro.train.optimizer import AdamWConfig
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(state_dtype=opt_dtype or cfg.opt_state_dtype),
+        microbatches=microbatches,
+        attn_chunk=attn_chunk,
+        accum_dtype=accum_dtype,
+    )
+    batch_shapes = input_specs(cfg, shape)
+    kind = shape.kind
+
+    with axis_rules(rules), jax.set_mesh(mesh):
+        if kind == "train":
+            pshapes, oshapes, paxes = abstract_train_state(cfg, tcfg)
+            oaxes = opt_state_axes(paxes)
+            p_sh = _named(mesh, paxes, pshapes)
+            o_sh = _named(mesh, oaxes, oshapes)
+            b_sh = _named(mesh, _batch_axes(batch_shapes), batch_shapes)
+            step_fn = make_train_step(
+                cfg, tcfg, param_specs=_specs(mesh, paxes, pshapes)
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, o_sh, b_sh, None),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(
+                pshapes, oshapes, batch_shapes, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+        elif kind == "prefill":
+            pshapes, _, paxes = abstract_train_state(cfg, tcfg)
+            p_sh = _named(mesh, paxes, pshapes)
+            b_sh = _named(mesh, _batch_axes(batch_shapes), batch_shapes)
+            fn = make_prefill_step(cfg, chunk=attn_chunk)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(pshapes, batch_shapes)
+        else:  # decode
+            pshapes, _, paxes = abstract_train_state(cfg, tcfg)
+            p_sh = _named(mesh, paxes, pshapes)
+            sshapes, saxes = abstract_decode_state(
+                cfg, shape.global_batch, shape.seq_len
+            )
+            s_sh = _named(mesh, saxes, sshapes)
+            tok_sh = _named(
+                mesh,
+                {"tokens": axspec("batch", None)},
+                {"tokens": batch_shapes["tokens"]},
+            )["tokens"]
+            fn = make_decode_step(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_sh, s_sh, tok_sh, None),
+                out_shardings=(None, s_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                pshapes,
+                sshapes,
+                batch_shapes["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    roof, colls = roofline_from(
+        compiled, model_flops_global(cfg, shape, kind), mesh.size
+    )
+    result.update(
+        status="ok",
+        kind=kind,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_total_gib": round(
+                (
+                    ma.argument_size_in_bytes
+                    + ma.temp_size_in_bytes
+                    + ma.output_size_in_bytes
+                    - ma.alias_size_in_bytes
+                )
+                / 2**30,
+                3,
+            ),
+        },
+        roofline=roof.as_dict(),
+        collectives={
+            "bytes_by_op": colls.bytes_by_op,
+            "count_by_op": colls.count_by_op,
+            "largest": colls.largest,
+        },
+    )
+    if verbose:
+        mem = result["memory"]["per_device_total_gib"]
+        print(
+            f"[dryrun] {arch} x {shape_name} x {result['mesh']} ({rules_mode}): "
+            f"OK mem/dev={mem} GiB compile={t_compile:.0f}s "
+            f"bottleneck={roof.bottleneck} "
+            f"terms(c/m/x)=({roof.compute_s:.4f},{roof.memory_s:.4f},{roof.collective_s:.4f})s"
+        )
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in ("flops", "bytes accessed", "transcendentals") if k in ca})
+        print("collectives:", result["collectives"]["bytes_by_op"])
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--rules", default="tp_sp",
+                    choices=["tp", "fsdp", "tp_sp", "fsdp_sp", "tp2d"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--attn-chunk", type=int, default=512)
+    ap.add_argument("--remat", default=None, choices=[None, "none", "dots", "full"])
+    ap.add_argument("--opt-dtype", default=None)
+    ap.add_argument("--accum-dtype", default="float32")
+    ap.add_argument("--out", default=None, help="directory for the JSON artifact")
+    args = ap.parse_args()
+    res = run_cell(
+        args.arch,
+        args.shape,
+        multi_pod=args.mesh == "multi",
+        rules_mode=args.rules,
+        microbatches=args.microbatches,
+        attn_chunk=args.attn_chunk,
+        remat=args.remat,
+        opt_dtype=args.opt_dtype,
+        accum_dtype=args.accum_dtype,
+    )
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        tag = f"{res['arch']}__{res['shape']}__{res['mesh']}__{res['rules']}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1)
+    return 0 if res.get("status") in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

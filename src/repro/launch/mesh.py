@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.  The single-pod mesh is one
+16x16 v5e pod (256 chips); the multi-pod mesh adds a leading "pod" axis
+(2 pods = 512 chips) — the paper's rack analogue (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_repair_mesh(r: int, w: int):
+    """Mesh for the layered-repair SPMD program: r pods x w nodes."""
+    return jax.make_mesh(
+        (r, w), ("pod", "node"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+# Hardware constants (TPU v5e) for the roofline terms.
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

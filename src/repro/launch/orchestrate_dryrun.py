@@ -1,0 +1,120 @@
+"""Run every (arch × shape × mesh) dry-run cell as a fresh subprocess.
+
+Each cell gets its own process so the 512-device XLA flag is applied
+cleanly and a pathological cell cannot poison the rest.  Results land as
+JSON artifacts consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.orchestrate_dryrun \
+      --out artifacts/dryrun [--mesh single multi] [--arch ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCHS
+from repro.models.config import SHAPES
+
+# per-cell overrides: sharding rules / microbatching / accumulation dtype
+# chosen to fit 16 GiB HBM per v5e chip (derivations in EXPERIMENTS.md
+# §Dry-run: fsdp for 35B+ weights, sequence-parallel residuals for
+# train_4k, bf16 grad accumulation for the 100B+ MoEs)
+BIG = ("dbrx_132b", "grok_1_314b", "command_r_35b")
+OVERRIDES: dict[tuple[str, str], list[str]] = {}
+for _a in BIG:
+    OVERRIDES[(_a, "train_4k")] = [
+        "--rules", "fsdp_sp", "--microbatches", "8", "--accum-dtype", "bfloat16",
+    ]
+    OVERRIDES[(_a, "prefill_32k")] = ["--rules", "fsdp_sp"]
+    OVERRIDES[(_a, "decode_32k")] = ["--rules", "fsdp"]
+# §Perf-1: FSDP weight gathers recur per microbatch; command-r fits at mb=2
+OVERRIDES[("command_r_35b", "train_4k")] = [
+    "--rules", "fsdp_sp", "--microbatches", "2", "--accum-dtype", "bfloat16",
+]
+# §Perf-2: MoE decode serves from resident 2-D-sharded expert weights
+OVERRIDES[("dbrx_132b", "decode_32k")] = ["--rules", "tp2d"]
+OVERRIDES[("grok_1_314b", "decode_32k")] = ["--rules", "tp2d"]
+OVERRIDES[("zamba2_1p2b", "train_4k")] = ["--rules", "tp_sp", "--microbatches", "2"]
+
+
+def cell_rules(arch: str, shape: str) -> str:
+    ov = OVERRIDES.get((arch, shape))
+    if ov:
+        return ov[ov.index("--rules") + 1]
+    return "tp_sp" if shape == "train_4k" else "tp"
+
+
+def cell_cmd(arch: str, shape: str, mesh: str, out: str) -> list[str]:
+    cmd = [
+        sys.executable,
+        "-m",
+        "repro.launch.dryrun",
+        "--arch",
+        arch,
+        "--shape",
+        shape,
+        "--mesh",
+        mesh,
+        "--out",
+        out,
+    ]
+    cmd += OVERRIDES.get(
+        (arch, shape), ["--rules", "tp_sp" if shape == "train_4k" else "tp"]
+    )
+    return cmd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"])
+    ap.add_argument("--arch", nargs="+", default=ARCHS)
+    ap.add_argument("--shape", nargs="+", default=list(SHAPES))
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for arch in args.arch:
+        for shape in args.shape:
+            for mesh in args.mesh:
+                tag = f"{arch}__{shape}__{mesh}"
+                rules = cell_rules(arch, shape)
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh}__{rules}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag} (exists)")
+                    continue
+                t0 = time.time()
+                proc = subprocess.run(
+                    cell_cmd(arch, shape, mesh, args.out),
+                    capture_output=True,
+                    text=True,
+                    timeout=args.timeout,
+                    env={**os.environ, "PYTHONPATH": "src"},
+                    cwd=os.path.dirname(os.path.dirname(os.path.dirname(
+                        os.path.dirname(os.path.abspath(__file__))))),
+                )
+                dt = time.time() - t0
+                ok = proc.returncode == 0
+                line = proc.stdout.strip().splitlines()
+                summary = line[0] if line else proc.stderr.strip().splitlines()[-1:]
+                print(f"[{'ok' if ok else 'FAIL'}] {tag} ({dt:.0f}s) {summary}")
+                if not ok:
+                    err_path = os.path.join(args.out, f"{tag}.err")
+                    with open(err_path, "w") as f:
+                        f.write(proc.stdout + "\n---\n" + proc.stderr)
+                results.append({"tag": tag, "ok": ok, "seconds": round(dt, 1)})
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    fails = [r for r in results if not r["ok"]]
+    print(f"\n{len(results) - len(fails)}/{len(results)} cells ok")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,520 @@
+"""Unified model: init / forward / decode for all ten architectures.
+
+Families:
+
+* dense | moe | vlm — homogeneous decoder stack, `lax.scan` over stacked
+  layer params (+ remat policy), GQA attention, SwiGLU/GeLU or MoE FFN.
+  VLM prepends stub patch embeddings (`vis_embeds`) to the token stream.
+* ssm (xlstm) — python-loop over mixed mLSTM/sLSTM blocks.
+* hybrid (zamba2) — scanned Mamba2 segments with one weight-shared
+  attention+MLP block invoked between segments.
+* audio (whisper) — encoder stack over stub frame embeddings + decoder
+  stack with cross-attention.
+
+Decode state is a pytree per architecture (KV caches / SSM states) with
+matching logical-axis specs so serve_step shards identically to training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba2 as m2
+from . import mlp as mlpm
+from . import xlstm as xl
+from .common import (
+    AxisSpec,
+    Params,
+    apply_norm,
+    constrain,
+    embed,
+    init_embedding,
+    init_norm,
+    spec,
+    tree_stack,
+    stacked_specs,
+)
+from .config import ArchConfig
+
+
+def _dtype(cfg: ArchConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+
+
+def _xlstm_is_slstm(cfg: ArchConfig, i: int) -> bool:
+    return bool(cfg.slstm_every) and (i + 1) % cfg.slstm_every == 0
+
+
+# ===================================================================== blocks
+def init_decoder_block(key, cfg: ArchConfig, dtype, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = init_norm(cfg.d_model, cfg.norm)
+    p["attn"], s["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if cross:
+        p["lnx"], s["lnx"] = init_norm(cfg.d_model, cfg.norm)
+        p["xattn"], s["xattn"] = attn.init_attention(ks[2], cfg, dtype)
+    if not cfg.parallel_block:
+        p["ln2"], s["ln2"] = init_norm(cfg.d_model, cfg.norm)
+    if cfg.moe:
+        p["moe"], s["moe"] = mlpm.init_moe(ks[1], cfg.d_model, cfg.moe, cfg.mlp_act, dtype)
+    else:
+        p["mlp"], s["mlp"] = mlpm.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    return p, s
+
+
+def decoder_block(p, cfg: ArchConfig, x, *, enc_kv=None, chunk=512):
+    """Training/prefill block. Returns (out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    a = attn.attention(p["attn"], cfg, h, chunk=chunk)
+    if cfg.parallel_block:
+        if cfg.moe:
+            f, aux = mlpm.moe_layer_with_loss(p["moe"], cfg, h)
+        else:
+            f = mlpm.mlp(p["mlp"], h, cfg.mlp_act)
+        out = x + (a + f) * cfg.residual_scale
+    else:
+        x = x + a * cfg.residual_scale
+        if enc_kv is not None:
+            hx = apply_norm(p["lnx"], x, cfg.norm)
+            x = x + attn.attention(
+                p["xattn"], cfg, hx, cross_kv=enc_kv, chunk=chunk
+            ) * cfg.residual_scale
+        h2 = apply_norm(p["ln2"], x, cfg.norm)
+        if cfg.moe:
+            f, aux = mlpm.moe_layer_with_loss(p["moe"], cfg, h2)
+        else:
+            f = mlpm.mlp(p["mlp"], h2, cfg.mlp_act)
+        out = x + f * cfg.residual_scale
+    out = constrain(out, "batch", "seq", "embed")
+    return out, aux
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+# =================================================================== init all
+def init_model(key, cfg: ArchConfig):
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    p: Params = {}
+    s: Params = {}
+    p["embed"], s["embed"] = init_embedding(keys[-1], cfg.padded_vocab, cfg.d_model, dtype)
+    p["ln_f"], s["ln_f"] = init_norm(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        p["lm_head"], s["lm_head"] = init_embedding(
+            keys[-2], cfg.padded_vocab, cfg.d_model, dtype
+        )
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        blocks, bspecs = [], None
+        for i in range(cfg.n_layers):
+            bp, bs = init_decoder_block(keys[i], cfg, dtype)
+            blocks.append(bp)
+            bspecs = bs
+        if cfg.scan_layers:
+            p["blocks"] = tree_stack(blocks)
+            s["blocks"] = stacked_specs(bspecs)
+        else:
+            p["blocks"] = blocks
+            s["blocks"] = [bspecs] * cfg.n_layers
+    elif fam == "ssm":  # xlstm
+        blocks, bspecs = [], []
+        for i in range(cfg.n_layers):
+            if _xlstm_is_slstm(cfg, i):
+                bp, bs = xl.init_slstm(keys[i], cfg, dtype)
+            else:
+                bp, bs = xl.init_mlstm(keys[i], cfg, dtype)
+            lp, ls = init_norm(cfg.d_model, cfg.norm)
+            entry = {"ln": lp, "core": bp}
+            sentry = {"ln": ls, "core": bs}
+            if cfg.d_ff:
+                entry["ln2"], sentry["ln2"] = init_norm(cfg.d_model, cfg.norm)
+                entry["mlp"], sentry["mlp"] = mlpm.init_mlp(
+                    jax.random.fold_in(keys[i], 1),
+                    cfg.d_model,
+                    cfg.d_ff,
+                    cfg.mlp_act,
+                    dtype,
+                )
+            blocks.append(entry)
+            bspecs.append(sentry)
+        p["blocks"], s["blocks"] = blocks, bspecs
+    elif fam == "hybrid":  # zamba2
+        mams, mspecs = [], None
+        for i in range(cfg.n_layers):
+            lp, ls = init_norm(cfg.d_model, cfg.norm)
+            bp, bs = m2.init_mamba2(keys[i], cfg, dtype)
+            mams.append({"ln": lp, "core": bp})
+            mspecs = {"ln": ls, "core": bs}
+        seg = cfg.shared_attn_every or cfg.n_layers
+        segs, rem = divmod(cfg.n_layers, seg)
+        p["mamba_main"] = tree_stack(mams[: segs * seg])
+        s["mamba_main"] = stacked_specs(mspecs)
+        if rem:
+            p["mamba_rem"] = tree_stack(mams[segs * seg :])
+            s["mamba_rem"] = stacked_specs(mspecs)
+        sp, ss = init_decoder_block(keys[-3], cfg, dtype)
+        p["shared"], s["shared"] = sp, ss  # weight-tied across invocations
+    elif fam == "audio":  # whisper
+        enc, espec = [], None
+        for i in range(cfg.encoder_layers):
+            bp, bs = init_decoder_block(jax.random.fold_in(keys[i], 7), cfg, dtype)
+            enc.append(bp)
+            espec = bs
+        p["encoder"] = tree_stack(enc)
+        s["encoder"] = stacked_specs(espec)
+        p["ln_enc"], s["ln_enc"] = init_norm(cfg.d_model, cfg.norm)
+        dec, dspec = [], None
+        for i in range(cfg.n_layers):
+            bp, bs = init_decoder_block(keys[i], cfg, dtype, cross=True)
+            dec.append(bp)
+            dspec = bs
+        p["blocks"] = tree_stack(dec)
+        s["blocks"] = stacked_specs(dspec)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p, s
+
+
+# ==================================================================== forward
+def _logits(p, cfg: ArchConfig, x):
+    w = p["embed"]["w"] if cfg.tie_embeddings else p["lm_head"]["w"]
+    logits = jnp.einsum("bsd,vd->bsv", x, w) * cfg.logit_scale
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def _embed_inputs(p, cfg: ArchConfig, batch: dict):
+    x = embed(p["embed"], batch["tokens"]) * cfg.embed_scale
+    if cfg.family == "vlm" and "vis_embeds" in batch:
+        x = jnp.concatenate([batch["vis_embeds"].astype(x.dtype), x], axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _run_encoder(p, cfg: ArchConfig, frames):
+    """Whisper encoder over stub frame embeddings (conv frontend stubbed)."""
+    x = frames.astype(_dtype(cfg))
+
+    def block(xa, bp):
+        ncfg = cfg
+        h = apply_norm(bp["ln1"], xa, ncfg.norm)
+        a = attn.attention(bp["attn"], ncfg, h, causal=False)
+        xa = xa + a
+        h2 = apply_norm(bp["ln2"], xa, ncfg.norm)
+        xa = xa + mlpm.mlp(bp["mlp"], h2, ncfg.mlp_act)
+        return xa, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_remat(block, cfg), x, p["encoder"])
+    else:
+        for i in range(cfg.encoder_layers):
+            bp = jax.tree.map(lambda a: a[i], p["encoder"])
+            x, _ = _remat(block, cfg)(x, bp)
+    return apply_norm(p["ln_enc"], x, cfg.norm)
+
+
+def forward(p, cfg: ArchConfig, batch: dict, *, chunk: int = 512):
+    """Full-sequence forward (training / prefill). Returns (logits, aux)."""
+    x, aux = forward_hidden(p, cfg, batch, chunk=chunk)
+    return _logits(p, cfg, x), aux
+
+
+def lm_head_weight(p, cfg: ArchConfig):
+    return p["embed"]["w"] if cfg.tie_embeddings else p["lm_head"]["w"]
+
+
+def forward_hidden(p, cfg: ArchConfig, batch: dict, *, chunk: int = 512):
+    """Backbone forward up to the final norm (pre-logits)."""
+    x = _embed_inputs(p, cfg, batch)
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        if cfg.scan_layers:
+            def block(h, bp):
+                out, a = decoder_block(bp, cfg, h, chunk=chunk)
+                return out, a
+            x, auxs = jax.lax.scan(_remat(block, cfg), x, p["blocks"])
+            aux = aux + jnp.sum(auxs)
+        else:
+            for bp in p["blocks"]:
+                x, a = decoder_block(bp, cfg, x, chunk=chunk)
+                aux = aux + a
+    elif fam == "ssm":
+        def xlstm_block(idx):
+            def run(bp, h_in):
+                h = apply_norm(bp["ln"], h_in, cfg.norm)
+                core = xl.slstm_block if _xlstm_is_slstm(cfg, idx) else xl.mlstm_block
+                out = h_in + core(bp["core"], cfg, h)
+                if "mlp" in bp:
+                    h2 = apply_norm(bp["ln2"], out, cfg.norm)
+                    out = out + mlpm.mlp(bp["mlp"], h2, cfg.mlp_act)
+                return constrain(out, "batch", "seq", "embed")
+            return run
+
+        for i, bp in enumerate(p["blocks"]):
+            x = _remat(xlstm_block(i), cfg)(bp, x)
+    elif fam == "hybrid":
+        seg = cfg.shared_attn_every or cfg.n_layers
+
+        def mamba_step(h, bp):
+            hn = apply_norm(bp["ln"], h, cfg.norm)
+            h = h + m2.mamba2_block(bp["core"], cfg, hn)
+            return constrain(h, "batch", "seq", "embed"), None
+
+        main = p["mamba_main"]
+        n_main = jax.tree.leaves(main)[0].shape[0]
+        segs = n_main // seg
+        shared_fn = _remat(
+            lambda bp, h: decoder_block(bp, cfg, h, chunk=chunk), cfg
+        )
+
+        def run_mambas(h, stack, count):
+            if cfg.scan_layers:
+                h, _ = jax.lax.scan(_remat(mamba_step, cfg), h, stack)
+                return h
+            for i in range(count):
+                bp = jax.tree.map(lambda a: a[i], stack)
+                h, _ = _remat(mamba_step, cfg)(h, bp)
+            return h
+
+        for gi in range(segs):
+            grp = jax.tree.map(lambda a: a[gi * seg : (gi + 1) * seg], main)
+            x = run_mambas(x, grp, seg)
+            x, a = shared_fn(p["shared"], x)
+            aux = aux + a
+        if "mamba_rem" in p:
+            rem = p["mamba_rem"]
+            x = run_mambas(x, rem, jax.tree.leaves(rem)[0].shape[0])
+    elif fam == "audio":
+        enc = _run_encoder(p, cfg, batch["frames"])
+
+        def block(h, bp):
+            kv = attn.cross_kv(bp["xattn"], cfg, enc)
+            out, a = decoder_block(bp, cfg, h, enc_kv=kv, chunk=chunk)
+            return out, a
+
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(_remat(block, cfg), x, p["blocks"])
+            aux = aux + jnp.sum(auxs)
+        else:
+            for i in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[i], p["blocks"])
+                x, a = _remat(block, cfg)(x, bp)
+                aux = aux + a
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(p["ln_f"], x, cfg.norm)
+    return x, aux
+
+
+# ===================================================================== decode
+def init_decode_state(cfg: ArchConfig, batch: int, kv_len: int):
+    """Per-architecture decode state (+ logical axis specs)."""
+    dtype = _dtype(cfg)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "audio"):
+        kspec = attn.KVCacheSpec(batch, kv_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+        def stack_cache():
+            c = kspec.zeros()
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), c
+            )
+        state = {"kv": stack_cache()}
+        axes = {"kv": jax.tree.map(
+            lambda s_: AxisSpec((None, *s_)), kspec.axes(),
+            is_leaf=lambda x: isinstance(x, AxisSpec),
+        )}
+        if fam == "audio":
+            state["enc"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), dtype)
+            axes["enc"] = spec("batch", None, "embed")
+        return state, axes
+    if fam == "ssm":
+        states, axes = [], []
+        for i in range(cfg.n_layers):
+            if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+                states.append(xl.slstm_init_state(cfg, batch, dtype))
+                axes.append({"h": spec("batch", "embed"), "c": spec("batch", "embed"),
+                             "n": spec("batch", "embed")})
+            else:
+                states.append(xl.mlstm_init_state(cfg, batch))
+                axes.append({"c": spec("batch", "heads", None, None)})
+        return {"blocks": states}, {"blocks": axes}
+    if fam == "hybrid":
+        seg = cfg.shared_attn_every or cfg.n_layers
+        n_shared = cfg.n_layers // seg
+        mstate = m2.mamba2_init_state(cfg, batch)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), mstate
+        )
+        maxes = jax.tree.map(
+            lambda s_: AxisSpec((None, *s_)), m2.mamba2_state_axes(),
+            is_leaf=lambda x: isinstance(x, AxisSpec),
+        )
+        kspec = attn.KVCacheSpec(batch, kv_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+        shared_kv = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_shared, *a.shape)), kspec.zeros()
+        )
+        kaxes = jax.tree.map(
+            lambda s_: AxisSpec((None, *s_)), kspec.axes(),
+            is_leaf=lambda x: isinstance(x, AxisSpec),
+        )
+        return {"mamba": stacked, "shared_kv": shared_kv}, {
+            "mamba": maxes,
+            "shared_kv": kaxes,
+        }
+    raise ValueError(fam)
+
+
+def decode_step(p, cfg: ArchConfig, state, tokens, position):
+    """One-token decode. tokens (B, 1) int32; returns (logits, new state)."""
+    x = embed(p["embed"], tokens) * cfg.embed_scale
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def block(h, xs):
+            bp, cache = xs
+            hn = apply_norm(bp["ln1"], h, cfg.norm)
+            a, cache = attn.decode_attention(bp["attn"], cfg, hn, cache, position)
+            if cfg.parallel_block:
+                f = (
+                    mlpm.moe_layer(bp["moe"], cfg, hn)
+                    if cfg.moe
+                    else mlpm.mlp(bp["mlp"], hn, cfg.mlp_act)
+                )
+                h = h + (a + f) * cfg.residual_scale
+            else:
+                h = h + a * cfg.residual_scale
+                h2 = apply_norm(bp["ln2"], h, cfg.norm)
+                f = (
+                    mlpm.moe_layer(bp["moe"], cfg, h2)
+                    if cfg.moe
+                    else mlpm.mlp(bp["mlp"], h2, cfg.mlp_act)
+                )
+                h = h + f * cfg.residual_scale
+            return h, cache
+
+        if cfg.scan_layers:
+            x, new_kv = jax.lax.scan(block, x, (p["blocks"], state["kv"]))
+        else:
+            parts = []
+            blocks = p["blocks"]
+            stacked = isinstance(blocks, dict)
+            for i in range(cfg.n_layers):
+                bp = (
+                    jax.tree.map(lambda a: a[i], blocks) if stacked else blocks[i]
+                )
+                cache = jax.tree.map(lambda a: a[i], state["kv"])
+                x, cache = block(x, (bp, cache))
+                parts.append(cache)
+            new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        state = {**state, "kv": new_kv}
+    elif fam == "audio":
+        enc = state["enc"]
+
+        def block(h, xs):
+            bp, cache = xs
+            hn = apply_norm(bp["ln1"], h, cfg.norm)
+            a, cache = attn.decode_attention(bp["attn"], cfg, hn, cache, position)
+            h = h + a
+            hx = apply_norm(bp["lnx"], h, cfg.norm)
+            kv = attn.cross_kv(bp["xattn"], cfg, enc)
+            h = h + attn.attention(bp["xattn"], cfg, hx, cross_kv=kv)
+            h2 = apply_norm(bp["ln2"], h, cfg.norm)
+            h = h + mlpm.mlp(bp["mlp"], h2, cfg.mlp_act)
+            return h, cache
+
+        if cfg.scan_layers:
+            x, new_kv = jax.lax.scan(block, x, (p["blocks"], state["kv"]))
+        else:
+            parts = []
+            for i in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[i], p["blocks"])
+                cache = jax.tree.map(lambda a: a[i], state["kv"])
+                x, cache = block(x, (bp, cache))
+                parts.append(cache)
+            new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        state = {**state, "kv": new_kv}
+    elif fam == "ssm":
+        new_states = []
+        for i, (bp, st) in enumerate(zip(p["blocks"], state["blocks"])):
+            h = apply_norm(bp["ln"], x, cfg.norm)
+            if _xlstm_is_slstm(cfg, i):
+                y, st = xl.slstm_decode(bp["core"], cfg, h, st)
+            else:
+                y, st = xl.mlstm_decode(bp["core"], cfg, h, st)
+            x = x + y
+            if "mlp" in bp:
+                h2 = apply_norm(bp["ln2"], x, cfg.norm)
+                x = x + mlpm.mlp(bp["mlp"], h2, cfg.mlp_act)
+            new_states.append(st)
+        state = {"blocks": new_states}
+    elif fam == "hybrid":
+        seg = cfg.shared_attn_every or cfg.n_layers
+        n_main = jax.tree.leaves(p["mamba_main"])[0].shape[0]
+        segs = n_main // seg
+
+        def mamba_step(h, xs):
+            bp, st = xs
+            hn = apply_norm(bp["ln"], h, cfg.norm)
+            y, st = m2.mamba2_decode(bp["core"], cfg, hn, st)
+            return h + y, st
+
+        def run_mamba_decode(h, grp, mst, count):
+            if cfg.scan_layers:
+                return jax.lax.scan(mamba_step, h, (grp, mst))
+            outs = []
+            for i in range(count):
+                bp = jax.tree.map(lambda a: a[i], grp)
+                st = jax.tree.map(lambda a: a[i], mst)
+                h, st = mamba_step(h, (bp, st))
+                outs.append(st)
+            return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+        new_mamba_parts = []
+        new_kv_parts = []
+        for gi in range(segs):
+            grp = jax.tree.map(lambda a: a[gi * seg : (gi + 1) * seg], p["mamba_main"])
+            mst = jax.tree.map(
+                lambda a: a[gi * seg : (gi + 1) * seg], state["mamba"]
+            )
+            x, mst = run_mamba_decode(x, grp, mst, seg)
+            new_mamba_parts.append(mst)
+            cache = jax.tree.map(lambda a: a[gi], state["shared_kv"])
+            hn = apply_norm(p["shared"]["ln1"], x, cfg.norm)
+            a, cache = attn.decode_attention(p["shared"]["attn"], cfg, hn, cache, position)
+            x = x + a
+            h2 = apply_norm(p["shared"]["ln2"], x, cfg.norm)
+            x = x + mlpm.mlp(p["shared"]["mlp"], h2, cfg.mlp_act)
+            new_kv_parts.append(cache)
+        if "mamba_rem" in p:
+            mst = jax.tree.map(lambda a: a[segs * seg :], state["mamba"])
+            rem_n = jax.tree.leaves(p["mamba_rem"])[0].shape[0]
+            x, mst = run_mamba_decode(x, p["mamba_rem"], mst, rem_n)
+            new_mamba_parts.append(mst)
+        state = {
+            "mamba": jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba_parts
+            ),
+            "shared_kv": jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *new_kv_parts
+            ),
+        }
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(p["ln_f"], x, cfg.norm)
+    return _logits(p, cfg, x), state

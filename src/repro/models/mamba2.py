@@ -1,0 +1,177 @@
+"""Mamba2 (SSD) block — chunked state-space recurrence (zamba2 backbone).
+
+Training runs the SSD chunked algorithm: intra-chunk attention-like
+matmuls plus an inter-chunk scan over the (heads, head_dim, d_state)
+state — matmul-heavy and O(S·chunk) memory.  Decode carries the state
+explicitly and costs O(1) per token (the sub-quadratic long-context
+path that qualifies zamba2/xlstm for the long_500k shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, constrain, dense, init_dense, spec
+from .config import ArchConfig
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_in = d * ssm.expand
+    n_heads = d_in // ssm.head_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    # fused input projection: [x, z, B, C, dt]
+    p["in_xz"], s["in_xz"] = init_dense(ks[0], d, 2 * d_in, dtype, spec("embed", "ffn"))
+    p["in_bc"], s["in_bc"] = init_dense(
+        ks[1], d, 2 * ssm.d_state, dtype, spec("embed", None)
+    )
+    p["in_dt"], s["in_dt"] = init_dense(ks[2], d, n_heads, dtype, spec("embed", "state"))
+    p["conv"] = jax.random.normal(ks[3], (ssm.d_conv, d_in), dtype) * 0.02
+    s["conv"] = spec(None, "ffn")
+    p["a_log"] = jnp.zeros((n_heads,), jnp.float32)
+    s["a_log"] = spec("state")
+    p["d_skip"] = jnp.ones((n_heads,), jnp.float32)
+    s["d_skip"] = spec("state")
+    p["out"], s["out"] = init_dense(ks[4], d_in, d, dtype, spec("ffn", "embed"))
+    return p, s
+
+
+def _conv1d(x, w):
+    """Causal depthwise conv: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int):
+    """SSD recurrence: h_t = exp(a·dt_t)·h_{t-1} + dt_t·(b_t ⊗ x_t).
+
+    x (B,S,H,P), dt (B,S,H), a (H) negative, b/c (B,S,N).
+    Returns y (B,S,H,P) with y_t = c_t · h_t.
+    """
+    bsz, s, h, pdim = x.shape
+    n = b.shape[-1]
+    nc = max(1, s // chunk)
+    ck = s // nc
+    xr = x.reshape(bsz, nc, ck, h, pdim)
+    dtr = dt.reshape(bsz, nc, ck, h)
+    br = b.reshape(bsz, nc, ck, n)
+    cr = c.reshape(bsz, nc, ck, n)
+
+    la = dtr * a[None, None, None, :]  # log decay per step (negative)
+    cum = jnp.cumsum(la, axis=2)  # (B,nc,ck,H) within-chunk cumulative
+    total = cum[:, :, -1, :]  # (B,nc,H)
+
+    # intra-chunk (causal "attention" with decay weights).  Contraction
+    # order is controlled manually: the (q,k,H) decay tensor is built
+    # once in bf16 and contracted against x in a single k-reduction —
+    # naive 4-operand einsum would materialize a (q,k,H,P) monster.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,q,k,H)
+    causal = jnp.tril(jnp.ones((ck, ck), bool))
+    w = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bnqs,bnks->bnqk", cr, br)  # (B,nc,q,k)
+    m_qkh = (scores[..., None] * w * dtr[:, :, None, :, :]).astype(x.dtype)
+    y_intra = jnp.einsum(
+        "bnqkh,bnkhp->bnqhp", m_qkh, xr, preferred_element_type=jnp.float32
+    )
+
+    # chunk-final states: sum_k exp(total - cum_k)·dt_k·(b_k ⊗ x_k)
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,ck,H)
+    dbx = ((decay_to_end * dtr)[..., None] * xr).astype(x.dtype)  # (B,nc,k,H,P)
+    chunk_state = jnp.einsum(
+        "bnks,bnkhp->bnhsp", br.astype(x.dtype), dbx,
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,H,N,P)
+
+    # inter-chunk scan
+    def body(h_prev, xs):
+        state, tot = xs  # (B,H,N,P), (B,H)
+        h_new = h_prev * jnp.exp(tot)[:, :, None, None] + state
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    _, h_in = jax.lax.scan(
+        body,
+        h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P): state entering chunk
+
+    # inter-chunk contribution: y += c_q · exp(cum_q) · h_in
+    y_inter = jnp.einsum(
+        "bnqs,bnhsp->bnqhp", cr.astype(x.dtype), h_in.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    ) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, pdim)
+    return y.astype(x.dtype)
+
+
+def mamba2_block(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    ssm = cfg.ssm
+    d_in = cfg.d_model * ssm.expand
+    n_heads = d_in // ssm.head_dim
+    bsz, s, _ = x.shape
+    xz = dense(p["in_xz"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = _conv1d(xi, p["conv"])
+    xi = jax.nn.silu(xi)
+    bc = dense(p["in_bc"], x).astype(jnp.float32)
+    b, c = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dense(p["in_dt"], x).astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    xh = xi.reshape(bsz, s, n_heads, ssm.head_dim)
+    y = _ssd_chunked(xh, dt, a, b, c, ssm.chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "batch", "seq", "ffn")
+    return dense(p["out"], y)
+
+
+# ------------------------------------------------------------------ decoding
+def mamba2_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    ssm = cfg.ssm
+    d_in = cfg.d_model * ssm.expand
+    h = d_in // ssm.head_dim
+    return {
+        "h": jnp.zeros((batch, h, ssm.d_state, ssm.head_dim), dtype),
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, d_in), dtype),
+    }
+
+
+def mamba2_state_axes():
+    return {"h": spec("batch", "state", None, None), "conv": spec("batch", None, "ffn")}
+
+
+def mamba2_decode(p: Params, cfg: ArchConfig, x: jax.Array, state: Params):
+    """One token: x (B,1,D) -> (y, new_state). O(1) in context length."""
+    ssm = cfg.ssm
+    d_in = cfg.d_model * ssm.expand
+    n_heads = d_in // ssm.head_dim
+    bsz = x.shape[0]
+    xz = dense(p["in_xz"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], xi.astype(state["conv"].dtype)], axis=1)
+    xi = jnp.einsum("bkc,kc->bc", window, p["conv"].astype(window.dtype))[:, None, :]
+    new_conv = window[:, 1:, :]
+    xi = jax.nn.silu(xi)
+    bc = dense(p["in_bc"], x).astype(jnp.float32)
+    b, c = jnp.split(bc, 2, axis=-1)  # (B,1,N)
+    dt = jax.nn.softplus(dense(p["in_dt"], x).astype(jnp.float32))  # (B,1,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xi.reshape(bsz, n_heads, ssm.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :, None, None] * a[None, :, None, None])
+    update = jnp.einsum(
+        "bh,bs,bhp->bhsp", dt[:, 0, :], b[:, 0, :], xh
+    )
+    h_new = state["h"] * decay + update
+    y = jnp.einsum("bs,bhsp->bhp", c[:, 0, :], h_new)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return dense(p["out"], y), {"h": h_new, "conv": new_conv}

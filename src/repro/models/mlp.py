@@ -1,0 +1,225 @@
+"""Feed-forward blocks: SwiGLU / GeLU and the token-choice MoE layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, constrain, dense, init_dense, spec
+from .config import ArchConfig, MoEConfig
+
+
+def init_mlp(key, d: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["up"], s["up"] = init_dense(ks[0], d, d_ff, dtype, spec("embed", "ffn"))
+    if act == "swiglu":
+        p["gate"], s["gate"] = init_dense(ks[1], d, d_ff, dtype, spec("embed", "ffn"))
+    p["down"], s["down"] = init_dense(ks[2], d_ff, d, dtype, spec("ffn", "embed"))
+    return p, s
+
+
+def mlp(p: Params, x: jax.Array, act: str) -> jax.Array:
+    h = dense(p["up"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", "seq", "ffn")
+    return dense(p["down"], h)
+
+
+# ------------------------------------------------------------------------ MoE
+def init_moe(key, d: int, moe: MoEConfig, act: str, dtype):
+    ks = jax.random.split(key, 4)
+    e, f = moe.num_experts, moe.d_ff_expert
+    lim = 1.0 / jnp.sqrt(d)
+
+    def w(key, shape, axes):
+        return jax.random.uniform(key, shape, dtype, -lim, lim), spec(*axes)
+
+    p, s = {}, {}
+    p["router"], s["router"] = init_dense(ks[0], d, e, jnp.float32, spec("embed", None))
+    p["up"], s["up"] = w(ks[1], (e, d, f), ("expert", "embed", "ffn"))
+    p["gate"], s["gate"] = w(ks[2], (e, d, f), ("expert", "embed", "ffn"))
+    p["down"], s["down"] = w(ks[3], (e, f, d), ("expert", "ffn", "embed"))
+    return p, s
+
+
+def _dispatch_local(tokens, p_router, moe, k):
+    """Local sort-based top-k dispatch: returns (xs (E,C,D), combine info)."""
+    n, d = tokens.shape
+    e = moe.num_experts
+    logits = tokens.astype(jnp.float32) @ p_router  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * density_prob)
+
+    capacity = max(8, min(int(moe.capacity_factor * n * k / e), n))
+    flat_expert = expert_idx.reshape(n * k)
+    flat_gate = gate_vals.reshape(n * k)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+
+    order = jnp.argsort(flat_expert)  # stable
+    e_sorted = flat_expert[order]
+    t_sorted = flat_tok[order]
+    g_sorted = flat_gate[order]
+    same = jnp.cumsum(jnp.ones_like(e_sorted), axis=0) - 1
+    start = jnp.searchsorted(e_sorted, jnp.arange(e), side="left")
+    pos = same - start[e_sorted]
+    keep = pos < capacity
+    slot = jnp.where(keep, e_sorted * capacity + pos, e * capacity)
+
+    xs = jnp.zeros((e * capacity + 1, d), tokens.dtype)
+    xs = xs.at[slot].add(tokens[t_sorted] * keep[:, None].astype(tokens.dtype))
+    xs = xs[:-1].reshape(e, capacity, d)
+    return xs, (slot, t_sorted, g_sorted, keep, capacity, aux)
+
+
+def _combine_local(ys, info, n):
+    slot, t_sorted, g_sorted, keep, capacity, _ = info
+    e, _, d = ys.shape
+    flat_ys = jnp.concatenate(
+        [ys.reshape(e * capacity, d), jnp.zeros((1, d), ys.dtype)], axis=0
+    )
+    contrib = flat_ys[slot] * (g_sorted * keep).astype(ys.dtype)[:, None]
+    return jnp.zeros((n, d), ys.dtype).at[t_sorted].add(contrib)
+
+
+def _expert_ffn(xs, up, gate, down, act):
+    h = jnp.einsum("ecd,edf->ecf", xs, up, preferred_element_type=jnp.float32)
+    if act == "swiglu":
+        h = (
+            jax.nn.silu(
+                jnp.einsum("ecd,edf->ecf", xs, gate, preferred_element_type=jnp.float32)
+            )
+            * h
+        )
+    else:
+        h = jax.nn.gelu(h)
+    h = h.astype(xs.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, down)
+
+
+def moe_layer_with_loss(p: Params, cfg: ArchConfig, x: jax.Array):
+    """Token-choice top-k MoE.
+
+    Without a mesh: plain local sort-based dispatch (smoke scale).
+    With a mesh: the whole layer runs in shard_map — each device routes
+    and packs *its own* tokens (so no global-index gathers ever appear),
+    then either
+
+    * EP (E % model-axis == 0, e.g. dbrx 16e): all_to_all over the model
+      axis ships each expert's slots to its owner, expert FFN runs on
+      local experts, reverse all_to_all returns outputs (Megatron/
+      Megablocks dispatch — the a2a pair is the MoE roofline signature);
+    * TP (e.g. grok 8e on a 16-way axis): every device holds all experts'
+      ffn *shards*; partial outputs are psum'd over the model axis.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or mesh.size == 1 or "model" not in mesh.shape:
+        return _moe_single(p, cfg, x)
+    return _moe_spmd(p, cfg, x, mesh)
+
+
+def _moe_single(p, cfg, x):
+    moe = cfg.moe
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    xs, info = _dispatch_local(tokens, p["router"]["w"], moe, moe.top_k)
+    ys = _expert_ffn(xs, p["up"], p["gate"] if cfg.mlp_act == "swiglu" else None,
+                     p["down"], cfg.mlp_act)
+    out = _combine_local(ys, info, tokens.shape[0])
+    return out.reshape(b, s, d), info[-1]
+
+
+def _moe_spmd(p, cfg, x, mesh):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import current_rules, resolve_spec
+
+    moe = cfg.moe
+    b, s, d = x.shape
+    msize = mesh.shape["model"]
+    ep = moe.num_experts % msize == 0 and moe.sharding == "expert"
+    rules = current_rules()
+    x_spec = resolve_spec(("batch", "seq", None), x.shape, mesh, rules)
+    f = moe.d_ff_expert
+    # the hidden dim may shard over data in addition to / instead of the
+    # expert dim (tp2d serving mode): weights then stay fully resident and
+    # the down-projection's partial outputs reduce over those axes.
+    extra_ffn = tuple(
+        a
+        for a in rules.mesh_axes("ffn")
+        if a != "model" and a in mesh.shape and f % mesh.shape[a] == 0
+    )
+    if ep:
+        ffn_axes = extra_ffn
+        w_up_spec = P("model", None, ffn_axes or None)
+        w_down_spec = P("model", ffn_axes or None, None)
+    else:  # TP: shard each expert's hidden dim over model (+ data in tp2d)
+        ffn_axes = extra_ffn
+        w_up_spec = P(None, None, ("model",) + ffn_axes)
+        w_down_spec = P(None, ("model",) + ffn_axes, None)
+    r_spec = P()
+    all_axes = tuple(mesh.axis_names)
+
+    def _axes_of(entry):
+        if entry is None:
+            return ()
+        return entry if isinstance(entry, tuple) else (entry,)
+
+    token_axes = tuple(a for e in x_spec for a in _axes_of(e))
+    # axes over which the expert FFN produces *partial* sums
+    partial_axes = tuple(ffn_axes) if ep else ("model",) + tuple(ffn_axes)
+    # partial sums are only combinable for identical tokens: gather the
+    # token set over any partial axis that also shards tokens, and
+    # psum_scatter the combined outputs back (Megatron TP-MLP pattern).
+    gather_axes = tuple(a for a in partial_axes if a in token_axes)
+    psum_axes = tuple(a for a in partial_axes if a not in token_axes)
+
+    def local(xl, router, up, gate, down):
+        bl, sl, _ = xl.shape
+        tokens = xl.reshape(bl * sl, d)
+        for a in gather_axes:
+            tokens = jax.lax.all_gather(tokens, a, axis=0, tiled=True)
+        xs, info = _dispatch_local(tokens, router, moe, moe.top_k)
+        if ep:
+            # a2a: (E, C, D) -> (E/m, C*m, D) expert-owner layout
+            xs = jax.lax.all_to_all(xs, "model", split_axis=0, concat_axis=1, tiled=True)
+            ys = _expert_ffn(xs, up, gate, down, cfg.mlp_act)
+            ys = jax.lax.all_to_all(ys, "model", split_axis=1, concat_axis=0, tiled=True)
+        else:
+            ys = _expert_ffn(xs, up, gate, down, cfg.mlp_act)
+        out = _combine_local(ys, info, tokens.shape[0])
+        if psum_axes:
+            out = jax.lax.psum(out, psum_axes)
+        for a in reversed(gather_axes):
+            out = jax.lax.psum_scatter(out, a, scatter_dimension=0, tiled=True)
+        if ep and "model" not in token_axes:
+            # tokens replicated over model (decode): every rank holds the
+            # same combined outputs, but that can't be statically
+            # inferred — reduce to prove replication
+            out = jax.lax.pmean(out, "model")
+        aux = info[-1]
+        missing = tuple(a for a in all_axes if a not in jax.typeof(aux).vma)
+        if missing:
+            aux = jax.lax.pvary(aux, missing)
+        aux = jax.lax.pmean(aux, all_axes)
+        return out.reshape(bl, sl, d), aux
+
+    gate_w = p["gate"] if cfg.mlp_act == "swiglu" else p["up"]
+    out, aux = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(x_spec, r_spec, w_up_spec, w_up_spec, w_down_spec),
+        out_specs=(x_spec, P()),
+    )(x, p["router"]["w"], p["up"], gate_w, p["down"])
+    return out, aux
+
+
+def moe_layer(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    return moe_layer_with_loss(p, cfg, x)[0]

@@ -1,0 +1,175 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is the parallelizable block: per head a (d_k × d_v) matrix memory
+with exponential input gates and forget-gate decay — computed here in
+the chunked form (same skeleton as SSD) so training is matmul-bound.
+sLSTM keeps per-unit scalar state with a recurrent projection, so it is
+inherently sequential: training scans over time (the paper's design),
+decode is O(1).  Both give O(1)-per-token decode, which is what puts
+xlstm-125m on the long_500k shape list.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, constrain, dense, init_dense, spec
+from .config import ArchConfig
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    hd = cfg.head_dim
+    h = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq"], s["wq"] = init_dense(ks[0], d, h * hd, dtype, spec("embed", "heads"))
+    p["wk"], s["wk"] = init_dense(ks[1], d, h * hd, dtype, spec("embed", "heads"))
+    p["wv"], s["wv"] = init_dense(ks[2], d, h * hd, dtype, spec("embed", "heads"))
+    p["wi"], s["wi"] = init_dense(ks[3], d, h, jnp.float32, spec("embed", "state"))
+    p["wf"], s["wf"] = init_dense(ks[4], d, h, jnp.float32, spec("embed", "state"))
+    p["wo"], s["wo"] = init_dense(ks[5], d, d, dtype, spec("heads", "embed"))
+    return p, s
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int):
+    """Chunked mLSTM: C_t = f_t·C_{t-1} + i_t·(k_t ⊗ v_t); y_t = q_t·C_t.
+
+    q/k/v (B,S,H,D); log_f/log_i (B,S,H).  Normalization follows the
+    max-state stabilizer in a simplified form (denominator |q·n| + 1).
+    """
+    b, s, h, d = q.shape
+    nc = max(1, s // chunk)
+    ck = s // nc
+    qr = q.reshape(b, nc, ck, h, d)
+    kr = k.reshape(b, nc, ck, h, d)
+    vr = v.reshape(b, nc, ck, h, d)
+    lf = log_f.reshape(b, nc, ck, h)
+    li = log_i.reshape(b, nc, ck, h)
+    cum = jnp.cumsum(lf, axis=2)
+    total = cum[:, :, -1, :]
+
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # decay q<-k
+    causal = jnp.tril(jnp.ones((ck, ck), bool))
+    w = jnp.where(causal[None, None, :, :, None], jnp.exp(seg + li[:, :, None, :, :]), 0.0)
+    scores = jnp.einsum("bnqhd,bnkhd->bnqkh", qr, kr)
+    m_qkh = (scores * w).astype(q.dtype)
+    y_intra = jnp.einsum(
+        "bnqkh,bnkhd->bnqhd", m_qkh, vr, preferred_element_type=jnp.float32
+    )
+
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum + li)
+    kd = (decay_to_end[..., None] * kr).astype(q.dtype)  # (B,nc,k,H,Dk)
+    chunk_state = jnp.einsum(
+        "bnkhd,bnkhe->bnhde", kd, vr, preferred_element_type=jnp.float32
+    )  # (B,nc,H,Dk,Dv)
+
+    def body(c_prev, xs):
+        state, tot = xs
+        c_new = c_prev * jnp.exp(tot)[:, :, None, None] + state
+        return c_new, c_prev
+
+    c0 = jnp.zeros((b, h, d, d), jnp.float32)
+    _, c_in = jax.lax.scan(
+        body, c0, (chunk_state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2))
+    )
+    c_in = c_in.transpose(1, 0, 2, 3, 4)
+    qd = (qr * jnp.exp(cum)[..., None]).astype(q.dtype)
+    y_inter = jnp.einsum(
+        "bnqhd,bnhde->bnqhe", qd, c_in.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, d)
+    norm = jnp.maximum(jnp.abs(jnp.sum(y, axis=-1, keepdims=True)), 1.0)
+    return (y / norm).astype(q.dtype)
+
+
+def mlstm_block(p: Params, cfg: ArchConfig, x: jax.Array, chunk: int = 256):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(b, s, h, hd)
+    k = dense(p["wk"], x).reshape(b, s, h, hd) / jnp.sqrt(hd).astype(x.dtype)
+    v = dense(p["wv"], x).reshape(b, s, h, hd)
+    log_f = jax.nn.log_sigmoid(dense(p["wf"], x).astype(jnp.float32))
+    log_i = dense(p["wi"], x).astype(jnp.float32)
+    log_i = -jax.nn.softplus(-log_i)  # log sigmoid for stability
+    y = _mlstm_chunked(q, k, v, log_f, log_i, chunk)
+    y = constrain(y, "batch", "seq", "heads", None)
+    return dense(p["wo"], y.reshape(b, s, h * hd))
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32)}
+
+
+def mlstm_decode(p: Params, cfg: ArchConfig, x: jax.Array, state: Params):
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(b, h, hd)
+    k = dense(p["wk"], x).reshape(b, h, hd) / jnp.sqrt(hd).astype(x.dtype)
+    v = dense(p["wv"], x).reshape(b, h, hd)
+    f = jax.nn.sigmoid(dense(p["wf"], x).astype(jnp.float32))[:, 0, :]
+    i = jax.nn.sigmoid(dense(p["wi"], x).astype(jnp.float32))[:, 0, :]
+    c = state["c"] * f[:, :, None, None] + i[:, :, None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), c)
+    norm = jnp.maximum(jnp.abs(jnp.sum(y, axis=-1, keepdims=True)), 1.0)
+    y = (y / norm).reshape(b, 1, h * hd).astype(x.dtype)
+    return dense(p["wo"], y), {"c": c}
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["wx"], s["wx"] = init_dense(ks[0], d, 4 * d, dtype, spec("embed", "ffn"))
+    p["wh"], s["wh"] = init_dense(ks[1], d, 4 * d, dtype, spec("embed", "ffn"))
+    p["out"], s["out"] = init_dense(ks[2], d, d, dtype, spec("embed", "embed"))
+    return p, s
+
+
+def _slstm_step(p, carry, xt):
+    h_prev, c_prev, n_prev = carry
+    z = dense(p["wx"], xt) + dense(p["wh"], h_prev)
+    zi, zf, zo, zc = jnp.split(z.astype(jnp.float32), 4, axis=-1)
+    i = jnp.exp(jnp.minimum(zi, 8.0))  # exponential input gate (capped)
+    f = jax.nn.sigmoid(zf)
+    o = jax.nn.sigmoid(zo)
+    c = f * c_prev + i * jnp.tanh(zc)
+    n = f * n_prev + i
+    h = (o * c / jnp.maximum(n, 1.0)).astype(xt.dtype)
+    return (h, c, n), h
+
+
+def slstm_block(p: Params, cfg: ArchConfig, x: jax.Array):
+    b, s, d = x.shape
+    h0 = jnp.zeros((b, d), x.dtype)
+    c0 = jnp.zeros((b, d), jnp.float32)
+    n0 = jnp.zeros((b, d), jnp.float32)
+
+    def body(carry, xt):
+        return _slstm_step(p, carry, xt)
+
+    _, ys = jax.lax.scan(body, (h0, c0, n0), x.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2)
+    return dense(p["out"], y)
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), dtype),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_decode(p: Params, cfg: ArchConfig, x: jax.Array, state: Params):
+    carry = (state["h"], state["c"], state["n"])
+    carry, y = _slstm_step(p, carry, x[:, 0, :])
+    h, c, n = carry
+    return dense(p["out"], y)[:, None, :], {"h": h, "c": c, "n": n}

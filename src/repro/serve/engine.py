@@ -1,0 +1,65 @@
+"""Minimal batched serving engine (demo/e2e scale).
+
+Prefill at demo scale runs the decode step over the prompt inside a
+lax.scan (one compiled program, cache populated token by token); the
+production dry-run path lowers the full-sequence prefill separately.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import backbone
+from repro.models.config import ArchConfig
+from .serve_step import make_decode_step, sample_token
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, batch: int, kv_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.kv_len = kv_len
+        self.state, self.state_axes = backbone.init_decode_state(cfg, batch, kv_len)
+        self._step = jax.jit(make_decode_step(cfg))
+        self.position = 0
+
+    def prefill(self, prompts: jax.Array) -> jax.Array:
+        """prompts (B, S) int32; feeds them through decode steps."""
+        b, s = prompts.shape
+        assert b == self.batch
+
+        def body(carry, t):
+            state, _ = carry
+            logits, state = self._step(
+                self.params, state, prompts[:, t][:, None], t + self.position
+            )
+            return (state, logits.astype(jnp.float32)), None
+
+        dummy = jnp.zeros((b, self.cfg.padded_vocab), jnp.float32)
+        (self.state, logits), _ = jax.lax.scan(
+            body, (self.state, dummy), jnp.arange(s)
+        )
+        self.position += s
+        return logits
+
+    def generate(self, n_tokens: int, key=None, temperature: float = 0.0):
+        key = key if key is not None else jax.random.key(0)
+        logits = jnp.zeros((self.batch, self.cfg.padded_vocab), jnp.float32)
+        last = self._last_logits if hasattr(self, "_last_logits") else None
+        out = []
+        tok = (
+            sample_token(key, last, temperature)
+            if last is not None
+            else jnp.zeros((self.batch,), jnp.int32)
+        )
+        for i in range(n_tokens):
+            key, sub = jax.random.split(key)
+            logits, self.state = self._step(
+                self.params, self.state, tok[:, None], self.position
+            )
+            tok = sample_token(sub, logits, temperature)
+            out.append(tok)
+            self.position += 1
+        self._last_logits = logits
+        return jnp.stack(out, axis=1)

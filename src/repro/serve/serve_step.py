@@ -1,0 +1,41 @@
+"""Serving steps.
+
+* ``prefill_step`` — full-sequence forward over the prompt (what the
+  ``prefill_32k`` dry-run cell lowers): returns next-token logits.
+* ``serve_step`` / ``decode_step`` — one new token against a KV cache /
+  SSM state of ``kv_len`` (the ``decode_32k`` and ``long_500k`` cells).
+
+Decode state layouts and their logical-axis specs come from
+``backbone.init_decode_state`` so serving shards exactly like training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import backbone
+from repro.models.config import ArchConfig
+
+
+def make_prefill_step(cfg: ArchConfig, chunk: int = 512):
+    def prefill_step(params, batch):
+        logits, _ = backbone.forward(params, cfg, batch, chunk=chunk)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def serve_step(params, state, tokens, position):
+        logits, state = backbone.decode_step(params, cfg, state, tokens, position)
+        return logits[:, -1, :], state
+
+    return serve_step
+
+
+def sample_token(key, logits, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )

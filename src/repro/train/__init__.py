@@ -1,0 +1,12 @@
+from .data import DataConfig, SyntheticStream
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, opt_state_axes
+from .schedule import ScheduleConfig, learning_rate
+from .train_step import TrainConfig, init_train_state, loss_fn, make_train_step
+from .xent import sharded_xent
+
+__all__ = [
+    "DataConfig", "SyntheticStream", "AdamWConfig", "adamw_update",
+    "init_opt_state", "opt_state_axes", "ScheduleConfig", "learning_rate",
+    "TrainConfig", "init_train_state", "loss_fn", "make_train_step",
+    "sharded_xent",
+]

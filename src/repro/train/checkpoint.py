@@ -1,0 +1,256 @@
+"""Erasure-coded distributed checkpointing — the paper's technique as a
+first-class framework feature.
+
+Training state (params + optimizer state) is serialized, split into k
+equal *blocks*, and encoded with a chosen code (RS / MSR / DRC) into n
+payloads placed on n failure domains grouped into r *racks* — in the
+framework's deployment the racks are TPU pods or hosts (DESIGN.md §2).
+On restore:
+
+* all payloads present → direct (systematic) read of the k data blocks;
+* one payload missing  → **layered repair** (the paper's degraded read /
+  node recovery): the exact RepairPlan runs, with inner-rack vs
+  cross-rack traffic accounted — DRC moves Eq. (3)-minimal bytes across
+  pods;
+* ≥ 2 missing, ≤ n-k    → MDS decode from any k survivors.
+
+Payloads carry CRC32s so silent corruption degrades to the repair path.
+The GF math runs through repro.kernels.ops.gf_matmul (Pallas on TPU).
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.code_base import ErasureCode
+from repro.core.codes import make_code
+
+
+# ------------------------------------------------------------- serialization
+def state_to_bytes(state) -> tuple[bytes, list[dict]]:
+    leaves, _ = jax.tree.flatten(state)
+    meta = []
+    chunks = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        meta.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        chunks.append(arr.tobytes())
+    return b"".join(chunks), meta
+
+
+def bytes_to_state(buf: bytes, meta: list[dict], like) -> Any:
+    _, treedef = jax.tree.flatten(like)
+    leaves = []
+    off = 0
+    for m in meta:
+        dt = np.dtype(m["dtype"])
+        n = int(np.prod(m["shape"])) if m["shape"] else 1
+        nb = n * dt.itemsize
+        arr = np.frombuffer(buf[off : off + nb], dtype=dt).reshape(m["shape"])
+        leaves.append(jax.numpy.asarray(arr))
+        off += nb
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ------------------------------------------------------------------ encoding
+@dataclass
+class EncodedCheckpoint:
+    code_spec: tuple[str, int, int, int]
+    payloads: dict[int, np.ndarray]  # node id -> (alpha, sub_bytes) uint8
+    total_bytes: int
+    meta: list[dict]
+    step: int = 0
+
+    @property
+    def code(self) -> ErasureCode:
+        return make_code(*self.code_spec)
+
+
+def encode_state(
+    state, *, family: str = "DRC", n: int = 9, k: int = 6, r: int = 3, step: int = 0
+) -> EncodedCheckpoint:
+    code = make_code(family, n, k, r)
+    buf, meta = state_to_bytes(state)
+    total = len(buf)
+    ka = code.k * code.alpha
+    sub = (total + ka - 1) // ka
+    sub = (sub + 127) // 128 * 128  # lane-aligned payloads for the kernel
+    padded = np.zeros(ka * sub, dtype=np.uint8)
+    padded[:total] = np.frombuffer(buf, dtype=np.uint8)
+    data = padded.reshape(ka, sub)
+    # systematic encode on the accelerated data path (Pallas on TPU)
+    from repro.kernels.ops import gf_matmul
+
+    parity = np.asarray(gf_matmul(code.generator[ka:], data))
+    coded = np.concatenate([data, parity], axis=0)
+    a = code.alpha
+    payloads = {i: coded[i * a : (i + 1) * a] for i in range(code.n)}
+    return EncodedCheckpoint(
+        code_spec=(family, n, k, r),
+        payloads=payloads,
+        total_bytes=total,
+        meta=meta,
+        step=step,
+    )
+
+
+@dataclass
+class RestoreReport:
+    mode: str  # direct | repair | decode
+    repaired_nodes: list[int] = field(default_factory=list)
+    cross_rack_blocks: float = 0.0
+    inner_rack_blocks: float = 0.0
+
+
+def restore_state(
+    ckpt: EncodedCheckpoint, like, available: set[int] | None = None
+) -> tuple[Any, RestoreReport]:
+    code = ckpt.code
+    ka = code.k * code.alpha
+    if available is None:
+        available = set(ckpt.payloads)
+    missing = [i for i in range(code.n) if i not in available]
+    report = RestoreReport(mode="direct")
+    payloads = {i: p for i, p in ckpt.payloads.items() if i in available}
+
+    data_nodes = list(range(code.k))
+    missing_data = [i for i in data_nodes if i not in available]
+    if not missing_data:
+        data = np.concatenate([payloads[i] for i in data_nodes], axis=0)
+    elif len(missing) == 1:
+        # single-failure: the paper's layered repair (degraded read)
+        f = missing[0]
+        plan = code.repair_plan(f)
+        repaired = plan.execute(payloads)
+        t = plan.traffic_blocks()
+        report = RestoreReport(
+            mode="repair",
+            repaired_nodes=[f],
+            cross_rack_blocks=t["cross_rack_blocks"],
+            inner_rack_blocks=t["inner_rack_blocks"],
+        )
+        payloads = dict(payloads)
+        payloads[f] = repaired
+        data = np.concatenate([payloads[i] for i in data_nodes], axis=0)
+    else:
+        if len(available) < code.k:
+            raise ValueError(
+                f"unrecoverable: {len(missing)} failures > n-k = {code.n - code.k}"
+            )
+        chosen = dict(list(sorted(payloads.items()))[: code.k])
+        data = code.decode(chosen)
+        report = RestoreReport(mode="decode", repaired_nodes=missing)
+    buf = data.reshape(-1).tobytes()[: ckpt.total_bytes]
+    return bytes_to_state(buf, ckpt.meta, like), report
+
+
+def repair_node(ckpt: EncodedCheckpoint, failed: int) -> tuple[np.ndarray, dict]:
+    """Node recovery of one payload; returns (payload, traffic stats)."""
+    code = ckpt.code
+    plan = code.repair_plan(failed)
+    payloads = {i: p for i, p in ckpt.payloads.items() if i != failed}
+    repaired = plan.execute(payloads)
+    return repaired, plan.traffic_blocks()
+
+
+# ---------------------------------------------------------------------- disk
+class CheckpointManager:
+    """Disk-backed erasure-coded checkpoints with CRC validation.
+
+    Layout: <dir>/step_<N>/node_<i>.bin (+ meta.json).  Each node file
+    would live on a distinct host/pod in deployment; restore tolerates
+    up to n-k missing or corrupt files.
+    """
+
+    def __init__(
+        self, directory: str, *, family="DRC", n=9, k=6, r=3, keep: int = 3
+    ):
+        self.dir = directory
+        self.spec = (family, n, k, r)
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _stepdir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def save(self, step: int, state) -> EncodedCheckpoint:
+        ckpt = encode_state(
+            state,
+            family=self.spec[0],
+            n=self.spec[1],
+            k=self.spec[2],
+            r=self.spec[3],
+            step=step,
+        )
+        d = self._stepdir(step)
+        os.makedirs(d, exist_ok=True)
+        crcs = {}
+        for i, payload in ckpt.payloads.items():
+            raw = payload.tobytes()
+            crcs[str(i)] = zlib.crc32(raw)
+            with open(os.path.join(d, f"node_{i}.bin"), "wb") as f:
+                f.write(raw)
+        meta = {
+            "step": step,
+            "code": list(ckpt.code_spec),
+            "total_bytes": ckpt.total_bytes,
+            "payload_shape": list(next(iter(ckpt.payloads.values())).shape),
+            "crcs": crcs,
+            "leaves": ckpt.meta,
+        }
+        with open(os.path.join(d, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        self._gc()
+        return ckpt
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, name, "meta.json")
+            ):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            d = self._stepdir(s)
+            for f in os.listdir(d):
+                os.remove(os.path.join(d, f))
+            os.rmdir(d)
+
+    def load(self, like, step: int | None = None):
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        step = step if step is not None else steps[-1]
+        d = self._stepdir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        shape = tuple(meta["payload_shape"])
+        payloads = {}
+        for i in range(meta["code"][1]):
+            path = os.path.join(d, f"node_{i}.bin")
+            if not os.path.exists(path):
+                continue
+            with open(path, "rb") as f:
+                raw = f.read()
+            if zlib.crc32(raw) != meta["crcs"][str(i)]:
+                continue  # corrupt -> treat as failed node
+            payloads[i] = np.frombuffer(raw, dtype=np.uint8).reshape(shape)
+        ckpt = EncodedCheckpoint(
+            code_spec=tuple(meta["code"]),
+            payloads=payloads,
+            total_bytes=meta["total_bytes"],
+            meta=meta["leaves"],
+            step=step,
+        )
+        state, report = restore_state(ckpt, like, available=set(payloads))
+        return state, step, report

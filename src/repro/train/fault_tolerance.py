@@ -1,0 +1,121 @@
+"""Fault-tolerance control plane: failure detection, straggler
+mitigation, elastic rescale.
+
+This is the policy layer a multi-pod deployment drives: heartbeats feed
+`FailureDetector`; step-time reports feed `StragglerMonitor`; on a
+failure the `FaultToleranceManager` picks the cheapest recovery action:
+
+* 1 lost state shard  → layered DRC repair (cross-pod bytes = Eq. (3));
+* ≤ n-k lost          → MDS decode from survivors;
+* > n-k lost          → roll back to the last durable checkpoint;
+* cluster resize      → elastic re-encode onto a new (n, k, r) stripe
+                        matching the new pod topology.
+
+All decisions are pure functions of reported state, so the layer is unit
+testable without real hardware; hooks are invoked by launch/train.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .checkpoint import EncodedCheckpoint, encode_state, repair_node, restore_state
+
+
+@dataclass
+class FailureDetector:
+    timeout_s: float = 60.0
+    last_beat: dict[int, float] = field(default_factory=dict)
+
+    def heartbeat(self, node: int, now: float | None = None):
+        self.last_beat[node] = time.monotonic() if now is None else now
+
+    def failed_nodes(self, now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(
+            n for n, t in self.last_beat.items() if now - t > self.timeout_s
+        )
+
+
+@dataclass
+class StragglerMonitor:
+    """Flags pods whose step time exceeds median by `threshold`x.
+
+    Mitigation policy mirrors the paper's §5.2 parallelization note:
+    rotate relayer/target roles away from slow pods so repair (and
+    checkpoint encode) work avoids stragglers.
+    """
+
+    threshold: float = 1.5
+    window: int = 16
+    times: dict[int, list[float]] = field(default_factory=dict)
+
+    def report(self, pod: int, step_time: float):
+        self.times.setdefault(pod, []).append(step_time)
+        self.times[pod] = self.times[pod][-self.window :]
+
+    def stragglers(self) -> list[int]:
+        if len(self.times) < 2:
+            return []
+        med = {p: float(np.median(t)) for p, t in self.times.items()}
+        overall = float(np.median(list(med.values())))
+        return sorted(p for p, m in med.items() if m > self.threshold * overall)
+
+    def preferred_relayer_order(self, pods: list[int]) -> list[int]:
+        slow = set(self.stragglers())
+        return sorted(pods, key=lambda p: (p in slow, p))
+
+
+@dataclass
+class RecoveryAction:
+    kind: str  # repair | decode | rollback | rescale
+    detail: dict = field(default_factory=dict)
+
+
+class FaultToleranceManager:
+    def __init__(self, *, family="DRC", n=9, k=6, r=3):
+        self.spec = (family, n, k, r)
+        self.detector = FailureDetector()
+        self.straggler = StragglerMonitor()
+
+    def plan_recovery(self, ckpt: EncodedCheckpoint, lost: list[int]) -> RecoveryAction:
+        n, k = ckpt.code_spec[1], ckpt.code_spec[2]
+        if not lost:
+            return RecoveryAction("noop")
+        if len(lost) == 1:
+            return RecoveryAction("repair", {"node": lost[0]})
+        if len(lost) <= n - k:
+            return RecoveryAction("decode", {"nodes": lost})
+        return RecoveryAction("rollback", {})
+
+    def execute(self, ckpt: EncodedCheckpoint, like, lost: list[int]):
+        action = self.plan_recovery(ckpt, lost)
+        if action.kind == "noop":
+            state, report = restore_state(ckpt, like)
+            return state, report, action
+        if action.kind == "rollback":
+            raise RuntimeError(
+                f"{len(lost)} failures exceed n-k; roll back to durable checkpoint"
+            )
+        available = set(ckpt.payloads) - set(lost)
+        state, report = restore_state(ckpt, like, available=available)
+        return state, report, action
+
+    # ------------------------------------------------------------- elastic
+    def rescale(
+        self, ckpt: EncodedCheckpoint, like, *, family=None, n=None, k=None, r=None
+    ) -> EncodedCheckpoint:
+        """Re-encode the stripe for a new cluster topology (elastic scale
+        up/down): decode current state, encode with the new (n, k, r)."""
+        state, _ = restore_state(ckpt, like)
+        fam, n0, k0, r0 = ckpt.code_spec
+        return encode_state(
+            state,
+            family=family or fam,
+            n=n or n0,
+            k=k or k0,
+            r=r or r0,
+            step=ckpt.step,
+        )

@@ -1,0 +1,86 @@
+"""AdamW with configurable state dtype (bf16 states for the 100B+ MoEs).
+
+State is a pytree mirroring params, so it inherits the same logical axis
+specs (and therefore the same mesh sharding) — including the erasure-
+coded checkpoint layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_axes(param_axes):
+    """Logical axis specs for the optimizer state (mirrors params)."""
+    from repro.models.common import AxisSpec
+
+    return {
+        "m": param_axes,
+        "v": param_axes,
+        "count": AxisSpec(()),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, lr, cfg: AdamWConfig):
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd_core(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        m_hat = m_new / (1 - cfg.b1 ** count)
+        v_hat = v_new / (1 - cfg.b2 ** count)
+        step = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    # NOTE: the update is a single elementwise chain per leaf; TPU fuses it
+    # into one in-place pass over the (donated) buffers.  The CPU dry-run
+    # backend materializes some of the f32 intermediates instead, which
+    # inflates memory_analysis for the 100B+ configs (quantified in
+    # EXPERIMENTS.md §Dry-run).  Chunking the update (lax.map over the
+    # layer-stack axis) was tried and rejected: it breaks donation
+    # aliasing and costs more than it saves.
+    upd = upd_core
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gnorm

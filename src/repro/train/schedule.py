@@ -1,0 +1,44 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, minicpm §4)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"  # cosine | wsd | constant
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1  # WSD: last 10% of steps decay
+    min_lr_frac: float = 0.1
+
+
+def learning_rate(step, cfg: ScheduleConfig):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(cfg.warmup_steps, 1))
+    if cfg.kind == "constant":
+        return cfg.peak_lr * warm
+    if cfg.kind == "cosine":
+        t = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+        return cfg.peak_lr * warm * frac
+    if cfg.kind == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.decay_frac)
+        t = jnp.clip(
+            (step - decay_start) / jnp.maximum(cfg.total_steps - decay_start, 1),
+            0.0,
+            1.0,
+        )
+        # exponential-ish decay to min_lr_frac (minicpm uses 10x drop)
+        frac = jnp.exp(jnp.log(cfg.min_lr_frac) * t)
+        return cfg.peak_lr * warm * frac
+    raise ValueError(cfg.kind)

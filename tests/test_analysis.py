@@ -1,0 +1,99 @@
+"""Regression tests: Fig. 3 observations and Tables 1-2 MTTDL vs the paper."""
+import pytest
+
+from repro.core.analysis.bandwidth import (
+    cross_rack_table,
+    fig3_rows,
+    paper_observations,
+)
+from repro.core.analysis.reliability import (
+    MTTDLModel,
+    PAPER_TABLE1,
+    PAPER_TABLE2,
+    table1_rows,
+    table2_rows,
+)
+
+
+def test_fig3_measured_equals_closed_form():
+    for row in fig3_rows():
+        assert row.cross_rack_blocks == pytest.approx(row.closed_form), row.label
+
+
+def test_fig3_examples_from_paper_text():
+    t = cross_rack_table()
+    # §3.2 walk-through values (units of blocks)
+    assert t["MSR(6,3,6)"] == pytest.approx(5 / 3)
+    assert t["MSR(6,3,3)"] == pytest.approx(4 / 3)
+    assert t["DRC(6,3,3)"] == pytest.approx(1.0)
+    assert t["DRC(9,6,3)"] == pytest.approx(2.0)
+    assert t["RS(9,6,3)"] == pytest.approx(4.0)
+
+
+def test_fig3_percentage_observations():
+    obs = paper_observations()
+    assert obs["rs86_vs_rs64_pct"] == pytest.approx(50.0)
+    assert obs["rs643_saving_pct"] == pytest.approx(25.0)
+    assert obs["msr643_saving_pct"] == pytest.approx(20.0)
+    assert obs["drc953_vs_rs953_pct"] == pytest.approx(66.7, abs=0.1)
+    assert obs["drc953_vs_msr844_pct"] == pytest.approx(33.3, abs=0.1)
+
+
+def test_fig3_storage_bandwidth_tradeoff():
+    """Same n-k: less redundancy -> more cross-rack bandwidth (paper obs 1)."""
+    t = cross_rack_table()
+    assert t["RS(8,6,8)"] > t["RS(6,4,6)"]
+    assert t["DRC(8,6,4)"] > t["DRC(6,4,3)"]
+
+
+@pytest.mark.parametrize("key", list(PAPER_TABLE1))
+def test_table1_matches_paper(key):
+    ours = table1_rows()[key]
+    for got, want in zip(ours, PAPER_TABLE1[key]):
+        assert got == pytest.approx(want, rel=0.02)
+
+
+@pytest.mark.parametrize("key", list(PAPER_TABLE2))
+def test_table2_matches_paper(key):
+    ours = table2_rows()[key]
+    for got, want in zip(ours, PAPER_TABLE2[key]):
+        assert got == pytest.approx(want, rel=0.02)
+
+
+def test_mttdl_monotonic_in_mttf():
+    vals = [
+        MTTDLModel(mttf_years=m, r=3, c_single=2.0).mttdl_years()
+        for m in (2, 4, 8, 16)
+    ]
+    assert all(a < b for a, b in zip(vals, vals[1:]))
+
+
+def test_mttdl_monotonic_in_bandwidth():
+    vals = [
+        MTTDLModel(gamma_gbps=g, r=3, c_single=2.0).mttdl_years()
+        for g in (0.2, 1.0, 5.0)
+    ]
+    assert all(a < b for a, b in zip(vals, vals[1:]))
+
+
+def test_hierarchical_beats_flat_without_correlated():
+    """Paper §3.4: ~33% MTTDL gain from the minimized cross-rack repair."""
+    flat = MTTDLModel(r=9, c_single=8 / 3).mttdl_years()
+    hier = MTTDLModel(r=3, c_single=2.0).mttdl_years()
+    assert hier / flat == pytest.approx(4 / 3, rel=0.02)
+
+
+def test_correlated_failures_hurt_hierarchical_more():
+    flat_drop = (
+        MTTDLModel(r=9, c_single=8 / 3).mttdl_years()
+        / MTTDLModel(r=9, c_single=8 / 3, lambda2=0.005).mttdl_years()
+    )
+    hier_drop = (
+        MTTDLModel(r=3, c_single=2.0).mttdl_years()
+        / MTTDLModel(r=3, c_single=2.0, lambda2=0.005).mttdl_years()
+    )
+    assert hier_drop > flat_drop
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

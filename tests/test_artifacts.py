@@ -1,0 +1,92 @@
+"""Guards on the dry-run / roofline artifacts (skipped if absent, e.g. on
+a fresh clone before `python -m repro.launch.orchestrate_dryrun`)."""
+import glob
+import json
+import os
+
+import pytest
+
+DRYRUN = "artifacts/dryrun"
+ROOFLINE = "artifacts/roofline"
+
+pytestmark = pytest.mark.skipif(
+    not (os.path.isdir(DRYRUN) and glob.glob(os.path.join(DRYRUN, "*.json"))),
+    reason="dry-run artifacts not generated",
+)
+
+
+def _cells():
+    out = {}
+    for p in glob.glob(os.path.join(DRYRUN, "*.json")):
+        if p.endswith("summary.json"):
+            continue
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def test_all_80_cells_present_and_clean():
+    cells = _cells()
+    assert len(cells) == 80
+    assert all(r["status"] in ("ok", "skipped") for r in cells.values())
+    assert {a for a, _, _ in cells} == {
+        "command_r_35b", "minicpm_2b", "starcoder2_7b", "starcoder2_3b",
+        "xlstm_125m", "internvl2_1b", "dbrx_132b", "grok_1_314b",
+        "whisper_small", "zamba2_1p2b",
+    }
+
+
+def test_long_500k_policy():
+    cells = _cells()
+    for (arch, shape, mesh), r in cells.items():
+        if shape != "long_500k":
+            continue
+        if arch in ("xlstm_125m", "zamba2_1p2b"):
+            assert r["status"] == "ok", (arch, mesh)
+        else:
+            assert r["status"] == "skipped", (arch, mesh)
+
+
+def test_multi_pod_never_needs_more_memory():
+    """Adding the pod axis must shard, not replicate: multi-pod memory per
+    device ≤ single-pod (small tolerance for collective scratch)."""
+    cells = _cells()
+    for (arch, shape, mesh), r in cells.items():
+        if mesh != "single" or r["status"] != "ok":
+            continue
+        other = cells.get((arch, shape, "multi"))
+        if not other or other["status"] != "ok":
+            continue
+        s = r["memory"]["per_device_total_gib"]
+        m = other["memory"]["per_device_total_gib"]
+        assert m <= s * 1.05 + 0.1, (arch, shape, s, m)
+
+
+def test_roofline_artifacts_consistent():
+    if not glob.glob(os.path.join(ROOFLINE, "*.json")):
+        pytest.skip("roofline artifacts not generated")
+    for p in glob.glob(os.path.join(ROOFLINE, "*.json")):
+        r = json.load(open(p))
+        assert r["status"] == "ok", p
+        rf = r["roofline"]
+        for key in ("compute_s", "memory_s", "collective_s"):
+            assert rf[key] >= 0.0
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        assert rf[{"compute": "compute_s", "memory": "memory_s",
+                   "collective": "collective_s"}[rf["bottleneck"]]] == dom
+
+
+def test_train_cells_probe_validated():
+    """MODEL_FLOPS/HLO ≈ 1 for dense train cells (probe methodology check)."""
+    if not glob.glob(os.path.join(ROOFLINE, "*.json")):
+        pytest.skip("roofline artifacts not generated")
+    dense = {"command_r_35b", "minicpm_2b", "starcoder2_7b", "starcoder2_3b",
+             "internvl2_1b"}
+    for p in glob.glob(os.path.join(ROOFLINE, "*train_4k*.json")):
+        r = json.load(open(p))
+        if r["arch"] in dense and r["status"] == "ok":
+            assert 0.8 <= r["roofline"]["useful_flops_ratio"] <= 1.3, r["arch"]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

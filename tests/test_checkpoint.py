@@ -1,0 +1,178 @@
+"""Erasure-coded checkpointing + fault tolerance tests (paper technique
+as a framework feature)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.train import TrainConfig, init_train_state
+from repro.train.checkpoint import (
+    CheckpointManager,
+    encode_state,
+    repair_node,
+    restore_state,
+)
+from repro.train.fault_tolerance import (
+    FailureDetector,
+    FaultToleranceManager,
+    StragglerMonitor,
+)
+
+
+def small_state(seed=0):
+    key = jax.random.key(seed)
+    return {
+        "w": jax.random.normal(key, (37, 53), jnp.float32),
+        "b": jnp.arange(11, dtype=jnp.int32),
+        "nested": {"m": jax.random.normal(key, (5, 7), jnp.bfloat16)},
+    }
+
+
+def trees_equal(a, b):
+    fa, _ = jax.tree.flatten(a)
+    fb, _ = jax.tree.flatten(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(fa, fb))
+
+
+@pytest.mark.parametrize("spec", [("DRC", 9, 6, 3), ("DRC", 9, 5, 3), ("RS", 9, 6, 3)])
+def test_encode_restore_roundtrip(spec):
+    state = small_state()
+    ckpt = encode_state(state, family=spec[0], n=spec[1], k=spec[2], r=spec[3])
+    got, report = restore_state(ckpt, state)
+    assert report.mode == "direct"
+    assert trees_equal(got, state)
+
+
+@pytest.mark.parametrize("failed", range(9))
+def test_single_failure_layered_repair(failed):
+    state = small_state(1)
+    ckpt = encode_state(state, family="DRC", n=9, k=6, r=3)
+    avail = set(range(9)) - {failed}
+    got, report = restore_state(ckpt, state, available=avail)
+    assert trees_equal(got, state)
+    if failed < 6:
+        assert report.mode == "repair"
+        # DRC(9,6,3): Eq.(3) minimum cross-rack traffic
+        assert report.cross_rack_blocks == pytest.approx(2.0)
+
+
+def test_multi_failure_mds_decode():
+    state = small_state(2)
+    ckpt = encode_state(state, family="DRC", n=9, k=6, r=3)
+    got, report = restore_state(ckpt, state, available={0, 2, 4, 5, 7, 8})
+    assert report.mode == "decode"
+    assert trees_equal(got, state)
+
+
+def test_unrecoverable_raises():
+    state = small_state(3)
+    ckpt = encode_state(state, family="DRC", n=9, k=6, r=3)
+    with pytest.raises(ValueError, match="unrecoverable"):
+        restore_state(ckpt, state, available={0, 1, 2, 3, 4})
+
+
+def test_repair_node_traffic():
+    state = small_state(4)
+    ckpt = encode_state(state, family="DRC", n=9, k=5, r=3)
+    payload, traffic = repair_node(ckpt, 0)
+    assert np.array_equal(payload, ckpt.payloads[0])
+    assert traffic["cross_rack_blocks"] == pytest.approx(1.0)  # Eq.(3)
+
+
+def test_checkpoint_manager_disk(tmp_path):
+    state = small_state(5)
+    mgr = CheckpointManager(str(tmp_path), family="DRC", n=9, k=6, r=3, keep=2)
+    mgr.save(10, state)
+    mgr.save(20, state)
+    mgr.save(30, state)
+    assert mgr.steps() == [20, 30]  # gc keeps last 2
+    got, step, report = mgr.load(state)
+    assert step == 30 and report.mode == "direct"
+    assert trees_equal(got, state)
+
+
+def test_checkpoint_manager_missing_file(tmp_path):
+    import os
+
+    state = small_state(6)
+    mgr = CheckpointManager(str(tmp_path), family="DRC", n=9, k=6, r=3)
+    mgr.save(1, state)
+    os.remove(os.path.join(str(tmp_path), "step_00000001", "node_0.bin"))
+    got, _, report = mgr.load(state)
+    assert report.mode == "repair" and report.repaired_nodes == [0]
+    assert trees_equal(got, state)
+
+
+def test_checkpoint_manager_corrupt_file(tmp_path):
+    import os
+
+    state = small_state(7)
+    mgr = CheckpointManager(str(tmp_path), family="DRC", n=9, k=6, r=3)
+    mgr.save(1, state)
+    path = os.path.join(str(tmp_path), "step_00000001", "node_3.bin")
+    with open(path, "r+b") as f:
+        f.seek(0)
+        f.write(b"\xff\xff\xff\xff")
+    got, _, report = mgr.load(state)
+    assert report.mode == "repair"  # CRC catches it -> degraded read
+    assert trees_equal(got, state)
+
+
+def test_real_train_state_roundtrip():
+    cfg = get_smoke("minicpm_2b")
+    params, opt, _ = init_train_state(jax.random.key(0), cfg, TrainConfig())
+    state = {"params": params, "opt": opt}
+    ckpt = encode_state(state, family="DRC", n=6, k=4, r=3)
+    got, report = restore_state(ckpt, state, available={0, 2, 3, 4, 5})
+    assert trees_equal(got, state)
+    assert report.mode == "repair"
+
+
+# --------------------------------------------------------- fault tolerance
+def test_failure_detector():
+    det = FailureDetector(timeout_s=10)
+    det.heartbeat(0, now=100.0)
+    det.heartbeat(1, now=105.0)
+    assert det.failed_nodes(now=112.0) == [0]
+    assert det.failed_nodes(now=120.0) == [0, 1]
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=1.5)
+    for pod in range(4):
+        for _ in range(8):
+            mon.report(pod, 1.0 if pod != 2 else 2.0)
+    assert mon.stragglers() == [2]
+    order = mon.preferred_relayer_order([0, 1, 2, 3])
+    assert order[-1] == 2  # straggler deprioritized as relayer
+
+
+def test_ft_manager_actions():
+    mgr = FaultToleranceManager(n=9, k=6, r=3)
+    state = small_state(8)
+    ckpt = encode_state(state, n=9, k=6, r=3)
+    assert mgr.plan_recovery(ckpt, []).kind == "noop"
+    assert mgr.plan_recovery(ckpt, [4]).kind == "repair"
+    assert mgr.plan_recovery(ckpt, [1, 2]).kind == "decode"
+    assert mgr.plan_recovery(ckpt, [1, 2, 3, 4]).kind == "rollback"
+    got, report, action = mgr.execute(ckpt, state, [4])
+    assert trees_equal(got, state) and action.kind == "repair"
+    with pytest.raises(RuntimeError, match="roll back"):
+        mgr.execute(ckpt, state, [0, 1, 2, 3])
+
+
+def test_elastic_rescale():
+    mgr = FaultToleranceManager()
+    state = small_state(9)
+    ckpt = encode_state(state, family="DRC", n=9, k=6, r=3)
+    new = mgr.rescale(ckpt, state, n=6, k=4, r=3)
+    assert new.code_spec == ("DRC", 6, 4, 3)
+    got, report = restore_state(new, state, available={0, 1, 3, 4, 5})
+    assert trees_equal(got, state)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

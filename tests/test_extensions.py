@@ -1,0 +1,91 @@
+"""Tests for the §7-related-work extensions: multi-failure repair (CORE),
+lazy repair, HACFS-style code switching."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codes import make_code
+from repro.core.multi_failure import (
+    CodeSwitcher,
+    LazyRepairPolicy,
+    multi_failure_repair,
+)
+
+
+def _stripe(code, seed=0, sub=32):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, size=(code.k * code.alpha, sub), dtype=np.uint8)
+    return data, dict(enumerate(code.encode(data)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 3))
+def test_multi_failure_repair_exact(seed, nfail):
+    code = make_code("DRC", 9, 6, 3)
+    rng = np.random.default_rng(seed)
+    _, payloads = _stripe(code, seed)
+    failed = sorted(rng.choice(9, size=nfail, replace=False).tolist())
+    avail = {i: p for i, p in payloads.items() if i not in failed}
+    out, report = multi_failure_repair(code, failed, avail)
+    for f in failed:
+        np.testing.assert_array_equal(out[f], payloads[f])
+    assert report.cross_rack_blocks + report.inner_rack_blocks == code.k
+
+
+def test_multi_failure_single_uses_layered_plan():
+    code = make_code("DRC", 9, 5, 3)
+    _, payloads = _stripe(code)
+    avail = {i: p for i, p in payloads.items() if i != 0}
+    out, report = multi_failure_repair(code, [0], avail)
+    np.testing.assert_array_equal(out[0], payloads[0])
+    assert report.cross_rack_blocks == pytest.approx(1.0)  # Eq.(3)
+
+
+def test_multi_failure_too_many_raises():
+    code = make_code("DRC", 9, 6, 3)
+    _, payloads = _stripe(code)
+    with pytest.raises(ValueError, match="exceed"):
+        multi_failure_repair(code, [0, 1, 2, 3], payloads)
+
+
+def test_lazy_repair_policy():
+    pol = LazyRepairPolicy(threshold=2)
+    assert pol.on_failure(0) == "defer"
+    assert pol.on_degraded_read(0) == "repair_single"
+    assert pol.on_degraded_read(5) == "direct"
+    assert pol.on_failure(1) == "repair_batch"
+    assert pol.on_failure(2) == "repair_now"  # n-k edge
+    assert pol.batched_saving_blocks() > 0  # batching beats eager
+    pol.repaired([0, 1, 2])
+    assert pol.on_failure(7) == "defer"
+
+
+def test_code_switcher_roundtrip():
+    sw = CodeSwitcher()
+    rng = np.random.default_rng(0)
+    blocks = rng.integers(0, 256, size=(6, 64), dtype=np.uint8)
+    # cold by default
+    assert sw.target_code(1)[0] == "RS"
+    coded = sw.switch(1, blocks)
+    cold = make_code(*sw.cold_spec)
+    got = cold.decode({i: coded[i] for i in range(cold.k)})
+    np.testing.assert_array_equal(got.reshape(6, -1)[:, :64], blocks)
+    # heat it up -> hot code
+    for _ in range(20):
+        sw.record_access(1)
+    assert sw.target_code(1)[0] == "DRC"
+    assert (1, "hot") in sw.plan_switches()
+    coded_hot = sw.switch(1, blocks)
+    hot = make_code(*sw.hot_spec)
+    got = hot.decode({i: coded_hot[i] for i in range(hot.k)})
+    np.testing.assert_array_equal(
+        got.reshape(hot.k, -1)[:, :64], blocks.reshape(hot.k, -1)[:, :64]
+    )
+    # hot stripe repairs cheaper cross-rack than cold
+    t_hot = hot.repair_plan(0).traffic_blocks()["cross_rack_blocks"]
+    t_cold = cold.repair_plan(0).traffic_blocks()["cross_rack_blocks"]
+    assert t_hot < t_cold
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

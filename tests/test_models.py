@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+reduced same-family config, runs one forward/train step and one decode
+step on CPU with finite outputs and correct shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import applicable_shapes, get_config, get_smoke, input_specs, list_archs
+from repro.models import backbone
+from repro.models.config import SHAPES
+from repro.serve import make_decode_step
+from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.train.data import DataConfig, SyntheticStream
+
+ARCHS = list_archs()
+
+
+@pytest.fixture(scope="module")
+def smoke_states():
+    return {}
+
+
+def _get(smoke_states, arch):
+    if arch not in smoke_states:
+        cfg = get_smoke(arch)
+        tcfg = TrainConfig()
+        params, opt, axes = init_train_state(jax.random.key(0), cfg, tcfg)
+        smoke_states[arch] = (cfg, tcfg, params, opt)
+    return smoke_states[arch]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch, smoke_states):
+    cfg, tcfg, params, opt = _get(smoke_states, arch)
+    batch = SyntheticStream(cfg, DataConfig(batch=2, seq=32)).batch_at(0)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    p2, o2, m = step(params, opt, batch, 5)  # step 5: warmup lr > 0
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    # params actually changed
+    delta = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch, smoke_states):
+    cfg, tcfg, params, _ = _get(smoke_states, arch)
+    batch = SyntheticStream(cfg, DataConfig(batch=2, seq=16)).batch_at(0)
+    logits, aux = backbone.forward(params, cfg, batch)
+    b = 2
+    s = 16 + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, smoke_states):
+    cfg, tcfg, params, _ = _get(smoke_states, arch)
+    state, _ = backbone.init_decode_state(cfg, batch=2, kv_len=16)
+    step = jax.jit(make_decode_step(cfg))
+    toks = jnp.array([[1], [2]], jnp.int32)
+    logits, state = step(params, state, toks, 0)
+    logits2, _ = step(params, state, toks, 1)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, smoke_states):
+    """Sequential decode must agree with the parallel forward pass."""
+    import dataclasses
+
+    cfg, tcfg, params, _ = _get(smoke_states, arch)
+    if cfg.family == "audio":
+        pytest.skip("decode consumes encoder state; covered separately")
+    if cfg.moe:
+        # drop-free capacity + f32: the token-dropping policy depends on
+        # batch size and bf16 flips near-tie routing — control both
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(cfg.moe, capacity_factor=8.0),
+            param_dtype="float32",
+        )
+        params, _ = backbone.init_model(jax.random.key(0), cfg)
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.key(3), (b, s), 0, cfg.vocab).astype(
+        jnp.int32
+    )
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch["vis_embeds"] = jnp.zeros((b, cfg.vision_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+    logits_par, _ = backbone.forward(params, cfg, batch)
+    state, _ = backbone.init_decode_state(cfg, batch=b, kv_len=s + 4)
+    step = jax.jit(make_decode_step(cfg))
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode starts after the visual prefix")
+    outs = []
+    for t in range(s):
+        lg, state = step(params, state, toks[:, t][:, None], t)
+        outs.append(lg)
+    got = np.stack([np.asarray(o, np.float32) for o in outs], axis=1)
+    want = np.asarray(logits_par, np.float32)
+    np.testing.assert_allclose(got, want, rtol=0.15, atol=0.15)
+
+
+def test_unrolled_matches_scanned():
+    """scan_layers=False (the roofline-probe path) is numerically the
+    same program as the scanned production path."""
+    import dataclasses
+
+    cfg = get_smoke("starcoder2_3b")
+    params, _ = backbone.init_model(jax.random.key(0), cfg)
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % cfg.vocab}
+    l1, _ = backbone.forward(params, cfg, batch)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    params2 = [
+        jax.tree.map(lambda a: a[i], params["blocks"]) for i in range(cfg.n_layers)
+    ]
+    p2 = dict(params)
+    p2["blocks"] = params2
+    l2, _ = backbone.forward(p2, cfg2, batch)
+    np.testing.assert_allclose(
+        np.asarray(l1, np.float32), np.asarray(l2, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_sanity(arch):
+    """Analytic count_params tracks the real parameter count (smoke cfg)."""
+    cfg = get_smoke(arch)
+    params, _ = backbone.init_model(jax.random.key(0), cfg)
+    real = sum(x.size for x in jax.tree.leaves(params))
+    est = cfg.count_params()
+    # padded vocab + per-family approximations: generous band
+    assert 0.4 * real < est < 2.5 * real, (arch, real, est)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_spec(arch):
+    """The full (published) configs carry the exact assigned hyperparams."""
+    spec = {
+        "command_r_35b": (40, 8192, 64, 8, 22528, 256000),
+        "minicpm_2b": (40, 2304, 36, 36, 5760, 122753),
+        "starcoder2_7b": (32, 4608, 36, 4, 18432, 49152),
+        "starcoder2_3b": (30, 3072, 24, 2, 12288, 49152),
+        "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+        "internvl2_1b": (24, 896, 14, 2, 4864, 151655),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "grok_1_314b": (64, 6144, 48, 8, 32768, 131072),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "zamba2_1p2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab)
+    assert got == spec
+
+
+def test_shape_applicability():
+    """long_500k only for sub-quadratic archs (per the assignment)."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg)
+        if arch in ("xlstm_125m", "zamba2_1p2b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+
+
+def test_input_specs_all_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            specs = input_specs(cfg, shape)
+            assert "tokens" in specs
+            if SHAPES[shape].kind == "train":
+                assert "labels" in specs
+            if cfg.family == "audio" and SHAPES[shape].kind != "decode":
+                assert "frames" in specs
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
