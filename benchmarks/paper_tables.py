@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import time
 
+from repro import obs
+
 
 def _timeit(fn, repeat=3):
     fn()  # warmup / construction cache
@@ -25,6 +27,8 @@ def fig3_bandwidth():
     us, rows = _timeit(fig3_rows, repeat=1)
     out = []
     for r in rows:
+        obs.gauge_set("fig3.cross_rack_blocks", r.cross_rack_blocks,
+                      code=r.label)
         out.append(
             (
                 f"fig3/{r.label}",
@@ -74,6 +78,8 @@ def table3_breakdown():
     ]:
         code = make_code("DRC", n, k, r)
         us, d = _timeit(lambda c=code, b=bm: sim.table3_breakdown(c, b))
+        for stage, secs in d.items():
+            obs.gauge_set("table3.stage_s", secs, code=label, stage=stage)
         derived = ";".join(f"{k2}={v:.3f}s" for k2, v in d.items())
         rows.append((f"table3/{label}", us, derived))
     return rows

@@ -28,6 +28,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import obs
+
 from . import gf
 from .placement import Placement
 
@@ -140,6 +142,23 @@ class RepairPlan:
             )
         return np.concatenate(rows, axis=0)
 
+    # ---------------------------------------------------------- observability
+    def _record_send(self, s: Send, sub_bytes: int, stage: str) -> None:
+        """Book one transfer into the obs counters.
+
+        Classification (inner vs cross rack) is intentionally the same
+        rule as `traffic_blocks`, so traced byte counters cross-check
+        exactly against the plan's symbolic bandwidth accounting:
+        bytes == blocks * alpha * sub_bytes.
+        """
+        rack = self.placement.rack_of
+        dst_rack = rack(self.failed) if s.dst == TARGET else rack(s.dst)
+        scope = "inner" if rack(s.src) == dst_rack else "cross"
+        nbytes = s.units * sub_bytes
+        obs.counter_add(f"repair.bytes.{scope}_rack", nbytes, stage=stage)
+        if stage == "relayer_encode" and scope == "cross":
+            obs.counter_add("repair.units_cross", s.units, relayer=str(s.src))
+
     # ------------------------------------------------------------- execution
     def execute(self, payloads: dict[int, np.ndarray]) -> np.ndarray:
         """Run the plan on real bytes.
@@ -147,22 +166,54 @@ class RepairPlan:
         payloads: node id -> (alpha, sub_bytes) uint8 for every surviving
         helper the plan references.  Returns the reconstructed (alpha,
         sub_bytes) payload of the failed node.
+
+        Under an active `repro.obs` tracer, every NodeEncode /
+        RelayerEncode / Decode gets a span and the bytes each transfer
+        moves are counted inner- vs cross-rack (see `_record_send`).
         """
-        sent: dict[tuple[int, int], np.ndarray] = {}
-        for s in self.node_sends:
-            sent[(s.src, s.dst)] = gf.gf_matmul(s.matrix, payloads[s.src])
-        units: list[np.ndarray] = []
-        for s in sorted(
-            (x for x in self.node_sends if x.dst == TARGET), key=lambda x: x.src
-        ):
-            units.append(sent[(s.src, TARGET)])
-        for s in sorted(self.relayer_sends, key=lambda x: x.src):
-            inputs = [payloads[s.src]]
-            for ns in self._relayer_input_order(s.src):
-                inputs.append(sent[(ns.src, s.src)])
-            units.append(gf.gf_matmul(s.matrix, np.concatenate(inputs, axis=0)))
-        target_in = np.concatenate(units, axis=0)
-        return gf.gf_matmul(self.decode, target_in)
+        sub_bytes = next(iter(payloads.values())).shape[1]
+        with obs.span("repair.execute", cat="repair", failed=self.failed,
+                      alpha=self.alpha, sub_bytes=sub_bytes):
+            sent: dict[tuple[int, int], np.ndarray] = {}
+            for s in self.node_sends:
+                with obs.span("repair.node_encode", cat="repair", src=s.src,
+                              dst=s.dst, units=s.units):
+                    sent[(s.src, s.dst)] = gf.gf_matmul(s.matrix, payloads[s.src])
+                    obs.counter_add(
+                        "repair.gf_mult_bytes",
+                        int(np.count_nonzero(s.matrix)) * sub_bytes,
+                        stage="node_encode",
+                    )
+                self._record_send(s, sub_bytes, "node_encode")
+            units: list[np.ndarray] = []
+            for s in sorted(
+                (x for x in self.node_sends if x.dst == TARGET), key=lambda x: x.src
+            ):
+                units.append(sent[(s.src, TARGET)])
+            for s in sorted(self.relayer_sends, key=lambda x: x.src):
+                with obs.span("repair.relayer_encode", cat="repair",
+                              relayer=s.src, units=s.units):
+                    inputs = [payloads[s.src]]
+                    for ns in self._relayer_input_order(s.src):
+                        inputs.append(sent[(ns.src, s.src)])
+                    units.append(
+                        gf.gf_matmul(s.matrix, np.concatenate(inputs, axis=0))
+                    )
+                    obs.counter_add(
+                        "repair.gf_mult_bytes",
+                        int(np.count_nonzero(s.matrix)) * sub_bytes,
+                        stage="relayer_encode",
+                    )
+                self._record_send(s, sub_bytes, "relayer_encode")
+            with obs.span("repair.decode", cat="repair",
+                          units=self.decode.shape[1]):
+                target_in = np.concatenate(units, axis=0)
+                obs.counter_add(
+                    "repair.gf_mult_bytes",
+                    int(np.count_nonzero(self.decode)) * sub_bytes,
+                    stage="decode",
+                )
+                return gf.gf_matmul(self.decode, target_in)
 
     def participants(self) -> list[int]:
         return sorted(

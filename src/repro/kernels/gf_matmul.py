@@ -44,6 +44,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import obs
+
 
 def _gf_bitplane_kernel(mb_ref, x_ref, o_ref, *, k: int, r: int):
     """One grid step: o[:, tile] = pack( (mb @ unpack(x[:, tile])) & 1 )."""
@@ -79,6 +81,12 @@ def gf_matmul_pallas(
     if kk != k or b % block_b:
         raise ValueError(f"shape mismatch: mb {mb.shape}, x {x.shape}, tile {block_b}")
     grid = (b // block_b,)
+    # Python body of a @jax.jit function: runs once per (shape, block_b)
+    # signature.  The counter therefore counts *retraces* — a growing
+    # value in a trace means the caller is churning compilation, which on
+    # TPU costs far more than the kernel itself.
+    obs.counter_add("kernel.pallas_retrace", 1,
+                    shape=f"{r}x{k}x{b}", block_b=str(block_b))
     return pl.pallas_call(
         functools.partial(_gf_bitplane_kernel, k=k, r=r),
         grid=grid,

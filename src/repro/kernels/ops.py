@@ -12,11 +12,13 @@ benchmarks).  It
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import gf as _gf
 from .gf_matmul import gf_matmul_pallas
 from .ref import gf_matmul_ref
@@ -60,7 +62,14 @@ def gf_matmul(
     force_kernel: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """GF(256) coding product: (R, K) @ (K, B) -> (R, B) uint8."""
+    """GF(256) coding product: (R, K) @ (K, B) -> (R, B) uint8.
+
+    Under an active `repro.obs` tracer every invocation records a
+    ``kernel.gf_matmul`` span with wall-clock and achieved GB/s (payload
+    in + out bytes; the timing blocks on the result, so traced runs are
+    synchronous).  With tracing off the only extra work is one global
+    read — the dispatch path is untouched.
+    """
     m_np = np.asarray(m, dtype=np.uint8)
     r, k = m_np.shape
     x = jnp.asarray(x, dtype=jnp.uint8)
@@ -69,6 +78,34 @@ def gf_matmul(
     b = x.shape[1]
     if interpret is None:
         interpret = not _on_tpu()
+    tracer = obs.current()
+    if tracer is None:
+        return _dispatch(m_np, x, r, k, b, block_b, force_kernel, interpret)
+    t0 = time.perf_counter()
+    y = _dispatch(m_np, x, r, k, b, block_b, force_kernel, interpret)
+    jax.block_until_ready(y)
+    dt = max(time.perf_counter() - t0, 1e-9)
+    path = "pallas" if (b >= _LANE and _on_tpu()) or force_kernel else "ref"
+    moved = (k + r) * b  # payload bytes in + out
+    tracer.record_span("kernel.gf_matmul", dt, cat="kernel", track="kernel",
+                       at_s=tracer.now_us() / 1e6 - dt,
+                       r=r, k=k, b=b, path=path, gbps=moved / dt / 1e9)
+    tracer.counter_add("kernel.gf_matmul.bytes", moved, path=path)
+    tracer.counter_add("kernel.gf_matmul.calls", 1, path=path)
+    tracer.gauge_set("kernel.gf_matmul.gbps", moved / dt / 1e9, path=path)
+    return y
+
+
+def _dispatch(
+    m_np: np.ndarray,
+    x: jax.Array,
+    r: int,
+    k: int,
+    b: int,
+    block_b: int | None,
+    force_kernel: bool,
+    interpret: bool,
+) -> jax.Array:
     # Off-TPU the Pallas kernel runs in (slow, python-level) interpret
     # mode — it exists for correctness validation; the log/exp oracle is
     # the fast CPU path.  On TPU the kernel is the fast path.

@@ -122,8 +122,29 @@ def param_bytes(tree: Params) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
-def constrain(x: jax.Array, *names: str | None) -> jax.Array:
-    """Logical sharding constraint on an activation (resolved lazily)."""
-    from repro.dist.sharding import logical_constraint
+def ambient_mesh():
+    """The ambient abstract mesh, or None when there isn't one.
 
+    jax >= 0.5 exposes ``jax.sharding.get_abstract_mesh()`` (set via
+    use_mesh/set_mesh); older jax has no ambient-mesh context at all, so
+    callers must take their single-process path.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    mesh = get()
+    return None if (mesh is None or mesh.empty) else mesh
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    """Logical sharding constraint on an activation (resolved lazily).
+
+    A constraint is advisory: when the distribution layer is absent
+    (single-process runs, bare test environments) it degrades to a
+    no-op rather than failing the whole model stack.
+    """
+    try:
+        from repro.dist.sharding import logical_constraint
+    except ImportError:
+        return x
     return logical_constraint(x, names)

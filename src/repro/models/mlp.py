@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import Params, constrain, dense, init_dense, spec
+from .common import Params, ambient_mesh, constrain, dense, init_dense, spec
 from .config import ArchConfig, MoEConfig
 
 
@@ -119,8 +119,8 @@ def moe_layer_with_loss(p: Params, cfg: ArchConfig, x: jax.Array):
     * TP (e.g. grok 8e on a 16-way axis): every device holds all experts'
       ffn *shards*; partial outputs are psum'd over the model axis.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or mesh.size == 1 or "model" not in mesh.shape:
+    mesh = ambient_mesh()
+    if mesh is None or mesh.size == 1 or "model" not in mesh.shape:
         return _moe_single(p, cfg, x)
     return _moe_spmd(p, cfg, x, mesh)
 

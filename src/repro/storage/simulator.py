@@ -26,6 +26,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import obs
+
 from ..core.code_base import ErasureCode
 from ..core.repair import TARGET, RepairPlan
 from .costmodel import CostModel
@@ -44,6 +46,8 @@ class StageTimes:
     write: float
 
     def as_dict(self) -> dict[str, float]:
+        # Key order IS the pipeline order; names must match obs.STAGE_NAMES
+        # so simulated and measured traces share one schema.
         return {
             "disk": self.disk,
             "node_encode": self.node_encode,
@@ -53,6 +57,14 @@ class StageTimes:
             "decode": self.decode,
             "write": self.write,
         }
+
+    def emit_spans(self, track: str, **attrs) -> None:
+        """Render the decomposition as back-to-back `repro.obs` stage spans
+        (cat="stage") on `track` — no-op without an active tracer."""
+        if not obs.enabled():
+            return
+        for name, dur in self.as_dict().items():
+            obs.record_span(name, dur, cat="stage", track=track, **attrs)
 
     @property
     def bottleneck(self) -> str:
@@ -148,7 +160,20 @@ class ClusterSim:
         ) + sum(s.units for s in plan.relayer_sends)
         decode = decode_in * sub / c.gf_compute_mib_s
         write = block_mib / c.disk_mib_s
-        return StageTimes(disk, node_encode, inner, relayer_encode, cross, decode, write)
+        t = StageTimes(disk, node_encode, inner, relayer_encode, cross, decode, write)
+        tracer = obs.current()
+        if tracer is not None:
+            t.emit_spans(
+                track=f"sim:{tracer.next_seq()}:{code!r}",
+                code=repr(code), failed=plan.failed, block_mib=block_mib,
+                gateway_gbps=gateway_gbps,
+            )
+            traffic = plan.traffic_blocks()
+            obs.counter_add("sim.bytes.inner_rack",
+                            traffic["inner_rack_blocks"] * block_mib * MIB)
+            obs.counter_add("sim.bytes.cross_rack",
+                            traffic["cross_rack_blocks"] * block_mib * MIB)
+        return t
 
     # ------------------------------------------------- strip-size effects
     def _strip_penalty(self, t: StageTimes, block_mib: float, strip_kib: float):
@@ -169,11 +194,18 @@ class ClusterSim:
         strip_kib: float = 256.0,
         failed: int = 0,
     ) -> float:
-        plan = code.repair_plan(failed)
-        t = self.stage_times(code, plan, block_mib, gateway_gbps)
-        call, fill, _ = self._strip_penalty(t, block_mib, strip_kib)
-        others = t.total - t.cross
-        return t.cross + (1.0 - self.cost.overlap_degraded) * others + call + fill
+        with obs.span("sim.degraded_read", cat="sim", code=repr(code),
+                      block_mib=block_mib, gateway_gbps=gateway_gbps):
+            plan = code.repair_plan(failed)
+            t = self.stage_times(code, plan, block_mib, gateway_gbps)
+            call, fill, _ = self._strip_penalty(t, block_mib, strip_kib)
+            others = t.total - t.cross
+            latency = (
+                t.cross + (1.0 - self.cost.overlap_degraded) * others + call + fill
+            )
+            obs.gauge_set("sim.degraded_read_s", latency, code=repr(code),
+                          gateway_gbps=str(gateway_gbps))
+            return latency
 
     def node_recovery_throughput(
         self,
@@ -184,6 +216,16 @@ class ClusterSim:
         strip_kib: float = 256.0,
     ) -> float:
         """MiB/s of repaired data (paper Fig. 6 / Fig. 8)."""
+        with obs.span("sim.node_recovery", cat="sim", code=repr(code),
+                      num_stripes=num_stripes, block_mib=block_mib,
+                      gateway_gbps=gateway_gbps, strip_kib=strip_kib):
+            return self._node_recovery_throughput(
+                code, num_stripes, block_mib, gateway_gbps, strip_kib
+            )
+
+    def _node_recovery_throughput(
+        self, code, num_stripes, block_mib, gateway_gbps, strip_kib
+    ) -> float:
         per_block = []
         for s in range(num_stripes):
             failed = s % code.n  # rotate the failed block's node per stripe
@@ -200,7 +242,10 @@ class ClusterSim:
                 + self.cost.fixed_block_overhead_s / num_stripes
             )
         total_time = float(np.sum(per_block)) + self.cost.fixed_block_overhead_s
-        return num_stripes * block_mib / total_time
+        tput = num_stripes * block_mib / total_time
+        obs.gauge_set("sim.recovery_mib_s", tput, code=repr(code),
+                      gateway_gbps=str(gateway_gbps))
+        return tput
 
     # ------------------------------------------------------------ table 3
     def table3_breakdown(

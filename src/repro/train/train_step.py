@@ -13,7 +13,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
-from repro.models import backbone
+from repro.models import backbone, common
 from repro.models.config import ArchConfig
 from .optimizer import AdamWConfig, adamw_update, init_opt_state
 from .schedule import ScheduleConfig, learning_rate
@@ -39,8 +39,7 @@ class TrainConfig:
 def loss_fn(params, cfg: ArchConfig, tcfg: TrainConfig, batch):
     if tcfg.fused_xent:
         hidden, aux = backbone.forward_hidden(params, cfg, batch, chunk=tcfg.attn_chunk)
-        mesh = jax.sharding.get_abstract_mesh()
-        mesh = None if (mesh is None or mesh.empty) else mesh
+        mesh = common.ambient_mesh()
         loss = vocab_parallel_xent(
             hidden,
             backbone.lm_head_weight(params, cfg),

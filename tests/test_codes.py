@@ -7,6 +7,7 @@ and the closed-form bandwidths Eq. (1)/(2)/(3).
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.code_base import (

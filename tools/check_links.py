@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Docs sanity: every relative link/path reference in the Markdown docs
+must resolve to a real file in the repo.
+
+Checks README.md, ROADMAP.md and docs/**/*.md:
+
+* inline links ``[text](target)`` — external (``http``/``https``/
+  ``mailto``) targets are skipped, ``#fragment`` suffixes are stripped;
+* backtick path references like ``src/repro/obs/tracer.py`` (anything
+  that looks like a repo-relative path with a file extension).
+
+Exit 0 when everything resolves, 1 with a report otherwise.
+
+Run:  python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = [REPO / "README.md", REPO / "ROADMAP.md",
+        *sorted((REPO / "docs").glob("**/*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PATH_RE = re.compile(r"`((?:src|docs|tests|benchmarks|examples|tools)"
+                     r"/[\w./-]+\.\w{1,4})`")
+
+
+def check(doc: Path) -> list[str]:
+    errors = []
+    text = doc.read_text()
+    targets: set[str] = set()
+    for m in LINK_RE.finditer(text):
+        t = m.group(1)
+        if t.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        targets.add(t.split("#", 1)[0])
+    targets.update(m.group(1) for m in PATH_RE.finditer(text))
+    for t in sorted(targets):
+        if not t:
+            continue
+        if not (doc.parent / t).exists() and not (REPO / t).exists():
+            errors.append(f"{doc.relative_to(REPO)}: broken reference {t!r}")
+    return errors
+
+
+def main() -> int:
+    errors: list[str] = []
+    for doc in DOCS:
+        if doc.exists():
+            errors.extend(check(doc))
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print(f"checked {len(DOCS)} docs: all relative references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
