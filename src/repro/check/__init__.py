@@ -1,0 +1,67 @@
+"""``repro.check`` — static verification of repair plans + AST linting.
+
+Two halves, both payload-free:
+
+* **Plan verifier** (`repro.check.plan`) — proves every registered
+  code's repair plans well-formed, symbolically decodable, bandwidth-
+  optimal and placement-safe, straight from their GF(256) matrices.
+* **AST linter** (`repro.check.ast_rules`) — a dependency-free pass
+  over the source tree catching the JAX/Pallas pitfalls that bite this
+  codebase (numpy inside jit, traced `if`s, host syncs, leaked spans,
+  mutable defaults).
+
+Both run in CI via ``python -m tools.run_check`` and gate merges; see
+docs/architecture.md §"Static verification" for the rule catalog.
+
+``repro.core.repair`` imports `PlanError` from ``repro.check.errors``
+at module load, so this ``__init__`` keeps everything except the error
+types lazy (PEP 562) to stay cycle-free.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from .errors import CheckError, PlanError
+
+__all__ = [
+    "CheckError",
+    "PlanError",
+    # report model
+    "FAIL", "PASS", "WARN", "CheckReport", "Finding", "LintRecord",
+    "PlanRecord",
+    # plan verifier
+    "MUTATIONS", "PLAN_RULES", "REGISTRY_SWEEP", "mutate_plan",
+    "run_registry_sweep", "self_test", "sweep_report", "verify_code",
+    "verify_plan", "verify_stripwise",
+    # AST linter
+    "ALL_LINT_RULES", "lint_file", "lint_paths", "lint_source", "lint_tree",
+]
+
+_LAZY = {
+    "FAIL": "report", "PASS": "report", "WARN": "report",
+    "CheckReport": "report", "Finding": "report", "LintRecord": "report",
+    "PlanRecord": "report",
+    "MUTATIONS": "plan", "PLAN_RULES": "plan", "REGISTRY_SWEEP": "plan",
+    "mutate_plan": "plan", "run_registry_sweep": "plan", "self_test": "plan",
+    "sweep_report": "plan", "verify_code": "plan", "verify_plan": "plan",
+    "verify_stripwise": "plan",
+    "ALL_LINT_RULES": "ast_rules", "lint_file": "ast_rules",
+    "lint_paths": "ast_rules", "lint_source": "ast_rules",
+    "lint_tree": "ast_rules",
+}
+
+
+def __getattr__(name: str) -> Any:
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro.check' has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{module}", __name__)
+    value = getattr(mod, name)
+    globals()[name] = value  # cache for subsequent lookups
+    return value
+
+
+def __dir__() -> list[str]:
+    return sorted(__all__)

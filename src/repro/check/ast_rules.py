@@ -1,0 +1,365 @@
+"""Dependency-free AST linter for the JAX/Pallas pitfalls this codebase
+actually has.
+
+Rules (ids are stable; see docs/architecture.md for the catalog):
+
+* ``ast.jit-np`` — ``np.*`` *calls* inside a ``@jax.jit`` function or a
+  Pallas kernel body: numpy executes at trace time on the host, silently
+  constant-folding what looks like per-step work (FAIL).
+* ``ast.jit-traced-if`` — a Python ``if`` whose test reads a non-static
+  parameter of a jitted/kernel function: traced values have no truth
+  value, or worse, the branch is burned in at trace time (WARN — the
+  heuristic cannot see types).
+* ``ast.jit-host-cast`` — ``float()``/``int()`` on values inside a
+  jitted/kernel function: a host sync that blocks dispatch (FAIL).
+* ``ast.host-sync`` — ``.block_until_ready()`` in library code: library
+  paths must stay async; benchmarks time explicitly and are exempt
+  (FAIL; suppress intentional syncs with a pragma).
+* ``ast.span-no-with`` — ``obs.span(...)`` / ``tracer.span(...)`` called
+  outside a ``with`` statement: the context manager is never entered, so
+  the span is never recorded — or, entered manually, leaks the
+  per-thread span stack on exceptions (FAIL).
+* ``ast.mutable-default`` — mutable default arguments on functions and
+  mutable class-level defaults on dataclass fields (use
+  ``field(default_factory=...)``) (FAIL).
+
+Suppression: append ``# check: ignore`` (everything) or
+``# check: ignore[rule, rule]`` (specific rules, with or without the
+``ast.`` prefix) to the offending line.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable
+
+from .report import FAIL, WARN, Finding, LintRecord
+
+L_NP_IN_JIT = "ast.jit-np"
+L_TRACED_IF = "ast.jit-traced-if"
+L_HOST_CAST = "ast.jit-host-cast"
+L_HOST_SYNC = "ast.host-sync"
+L_SPAN_WITH = "ast.span-no-with"
+L_MUT_DEFAULT = "ast.mutable-default"
+
+ALL_LINT_RULES = (
+    L_NP_IN_JIT, L_TRACED_IF, L_HOST_CAST, L_HOST_SYNC, L_SPAN_WITH,
+    L_MUT_DEFAULT,
+)
+
+_PRAGMA = re.compile(r"#\s*check:\s*ignore(?:\[([^\]]*)\])?")
+
+# Paths (relative, substring match) where .block_until_ready is expected:
+# benchmark/timing code blocks on results by design.
+_SYNC_EXEMPT = ("benchmarks", "examples", "tests")
+
+
+# --------------------------------------------------------------------------
+# AST helpers
+# --------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.jit' for Attribute chains, 'jit' for Names, '' otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+_JIT_NAMES = {"jit", "jax.jit", "pjit", "jax.pjit"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+
+
+def _jit_static_names(dec: ast.expr) -> set[str] | None:
+    """If `dec` marks a jitted function, return its static arg names
+    (possibly empty); otherwise None."""
+    if _dotted(dec) in _JIT_NAMES:
+        return set()
+    if isinstance(dec, ast.Call):
+        callee = _dotted(dec.func)
+        inner: ast.expr | None = None
+        kwargs = dec.keywords
+        if callee in _JIT_NAMES:
+            inner = dec.func
+        elif callee in _PARTIAL_NAMES and dec.args:
+            if _dotted(dec.args[0]) not in _JIT_NAMES:
+                return None
+            inner = dec.args[0]
+        if inner is None:
+            return None
+        static: set[str] = set()
+        for kw in kwargs:
+            if kw.arg == "static_argnames":
+                for const in ast.walk(kw.value):
+                    if isinstance(const, ast.Constant) and isinstance(
+                        const.value, str
+                    ):
+                        static.add(const.value)
+        return static
+    return None
+
+
+def _pallas_kernel_names(tree: ast.AST) -> set[str]:
+    """Names of functions passed (possibly via partial) to pallas_call."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not _dotted(node.func).endswith("pallas_call"):
+            continue
+        if not node.args:
+            continue
+        kernel = node.args[0]
+        if isinstance(kernel, ast.Call) and _dotted(kernel.func) in _PARTIAL_NAMES:
+            kernel = kernel.args[0] if kernel.args else kernel
+        name = _dotted(kernel)
+        if name:
+            out.add(name.rsplit(".", 1)[-1])
+    return out
+
+
+def _param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    a = fn.args
+    params = [*a.posonlyargs, *a.args, *a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg)
+    if a.kwarg:
+        params.append(a.kwarg)
+    return {p.arg for p in params}
+
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                     ast.SetComp)
+_MUTABLE_CALLS = {"list", "dict", "set", "collections.defaultdict",
+                  "defaultdict", "collections.OrderedDict", "OrderedDict"}
+
+
+def _is_mutable_default(node: ast.expr | None) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, _MUTABLE_LITERALS):
+        return True
+    if isinstance(node, ast.Call):
+        return _dotted(node.func) in _MUTABLE_CALLS
+    return False
+
+
+def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _dotted(target) in ("dataclass", "dataclasses.dataclass"):
+            return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# The linter
+# --------------------------------------------------------------------------
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, lines: list[str]):
+        self.path = path
+        self.lines = lines
+        self.findings: list[Finding] = []
+        self.kernel_names: set[str] = set()
+        # stack of (is_jit_context, static_param_names, dynamic_param_names)
+        self._jit_stack: list[tuple[bool, set[str], set[str]]] = []
+        self._parents: dict[int, ast.AST] = {}
+
+    # ------------------------------------------------------------- plumbing
+    def run(self, tree: ast.AST) -> list[Finding]:
+        self.kernel_names = _pallas_kernel_names(tree)
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[id(child)] = parent
+        self.visit(tree)
+        return self.findings
+
+    def _emit(self, rule: str, severity: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        col = getattr(node, "col_offset", 0)
+        if self._suppressed(rule, line):
+            return
+        self.findings.append(Finding(
+            rule, severity, f"{self.path}:{line}:{col}: {message}",
+            {"path": self.path, "line": line, "col": col},
+        ))
+
+    def _suppressed(self, rule: str, line: int) -> bool:
+        if not (1 <= line <= len(self.lines)):
+            return False
+        m = _PRAGMA.search(self.lines[line - 1])
+        if not m:
+            return False
+        if m.group(1) is None:
+            return True
+        wanted = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        return rule in wanted or rule.removeprefix("ast.") in wanted
+
+    def _in_jit(self) -> bool:
+        return any(flag for flag, _, _ in self._jit_stack)
+
+    def _dynamic_params(self) -> set[str]:
+        out: set[str] = set()
+        for flag, _static, dynamic in self._jit_stack:
+            if flag:
+                out |= dynamic
+        return out
+
+    # ------------------------------------------------------------ functions
+    def _visit_function(self, node: ast.FunctionDef | ast.AsyncFunctionDef) -> None:
+        static: set[str] | None = None
+        for dec in node.decorator_list:
+            static = _jit_static_names(dec)
+            if static is not None:
+                break
+        if static is None and node.name in self.kernel_names:
+            # pallas kernel body: positional params are Refs (dynamic);
+            # keyword-only params are compile-time config bound via
+            # functools.partial (the codebase's kernel idiom).
+            static = {a.arg for a in node.args.kwonlyargs}
+        is_jit = static is not None
+        dynamic = _param_names(node) - (static or set()) if is_jit else set()
+        # mutable default args (any function, jitted or not)
+        defaults = [*node.args.defaults, *node.args.kw_defaults]
+        for d in defaults:
+            if _is_mutable_default(d):
+                self._emit(
+                    L_MUT_DEFAULT, FAIL, d,
+                    f"mutable default argument in {node.name}() — shared "
+                    f"across calls; use None or a tuple",
+                )
+        self._jit_stack.append((is_jit, static or set(), dynamic))
+        self.generic_visit(node)
+        self._jit_stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_function(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_function(node)
+
+    # ------------------------------------------------------------- classes
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        if _is_dataclass_decorated(node):
+            for stmt in node.body:
+                value = None
+                if isinstance(stmt, ast.AnnAssign):
+                    value = stmt.value
+                elif isinstance(stmt, ast.Assign):
+                    value = stmt.value
+                if _is_mutable_default(value):
+                    assert value is not None
+                    self._emit(
+                        L_MUT_DEFAULT, FAIL, value,
+                        f"mutable default on dataclass {node.name} field — "
+                        f"use field(default_factory=...)",
+                    )
+        self.generic_visit(node)
+
+    # ----------------------------------------------------------------- ifs
+    def visit_If(self, node: ast.If) -> None:
+        if self._in_jit():
+            dynamic = self._dynamic_params()
+            used = {
+                n.id
+                for n in ast.walk(node.test)
+                if isinstance(n, ast.Name) and n.id in dynamic
+            }
+            if used:
+                self._emit(
+                    L_TRACED_IF, WARN, node,
+                    f"Python `if` on possibly-traced value(s) "
+                    f"{sorted(used)} inside a jitted/kernel function — "
+                    f"use jnp.where / lax.cond, or mark the arg static",
+                )
+        self.generic_visit(node)
+
+    # --------------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = _dotted(node.func)
+        if self._in_jit():
+            if callee.startswith(("np.", "numpy.")):
+                self._emit(
+                    L_NP_IN_JIT, FAIL, node,
+                    f"`{callee}(...)` inside a jitted/kernel function runs "
+                    f"on the host at trace time — use jnp",
+                )
+            if callee in ("float", "int") and node.args:
+                self._emit(
+                    L_HOST_CAST, FAIL, node,
+                    f"`{callee}(...)` inside a jitted/kernel function "
+                    f"forces a host sync — keep values on device",
+                )
+        if callee.endswith("block_until_ready") and not any(
+            part in self.path for part in _SYNC_EXEMPT
+        ):
+            self._emit(
+                L_HOST_SYNC, FAIL, node,
+                "`.block_until_ready()` in library code blocks dispatch — "
+                "benchmarks only, or suppress with a pragma if intentional",
+            )
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "span"
+            and not self._span_is_entered(node)
+        ):
+            self._emit(
+                L_SPAN_WITH, FAIL, node,
+                f"`{callee}(...)` outside a `with` — the span is never "
+                f"recorded (or leaks the per-thread span stack)",
+            )
+        self.generic_visit(node)
+
+    def _span_is_entered(self, node: ast.Call) -> bool:
+        """span(...) calls must be with-items (or forwarded verbatim)."""
+        parent = self._parents.get(id(node))
+        if isinstance(parent, ast.withitem):
+            return True
+        if isinstance(parent, ast.Return):
+            return True  # helper forwarding the context manager
+        if isinstance(parent, ast.Call) and _dotted(parent.func).endswith(
+            "enter_context"
+        ):
+            return True
+        return False
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+
+def lint_source(src: str, path: str = "<string>") -> list[Finding]:
+    """Lint one source string; returns findings sorted by line."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(
+            "ast.syntax", FAIL, f"{path}:{e.lineno or 0}: {e.msg}",
+            {"path": path, "line": e.lineno or 0},
+        )]
+    findings = _Linter(path, src.splitlines()).run(tree)
+    return sorted(findings, key=lambda f: int(f.witness.get("line", 0)))
+
+
+def lint_file(path: str | Path) -> LintRecord:
+    p = Path(path)
+    return LintRecord(path=str(p), findings=lint_source(p.read_text(), str(p)))
+
+
+def lint_paths(paths: Iterable[str | Path]) -> list[LintRecord]:
+    return [lint_file(p) for p in paths]
+
+
+def lint_tree(root: str | Path) -> list[LintRecord]:
+    """Lint every ``*.py`` under `root`, sorted for stable reports."""
+    files = sorted(Path(root).rglob("*.py"))
+    return lint_paths(files)

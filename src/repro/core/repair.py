@@ -25,10 +25,12 @@ Unit = one subblock payload of B/α bytes; bandwidth is reported in *blocks*.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Any
 
 import numpy as np
 
 from repro import obs
+from repro.check.errors import PlanError
 
 from . import gf
 from .placement import Placement
@@ -43,6 +45,29 @@ class Send:
     src: int
     dst: int  # a relayer node id, or TARGET
     matrix: np.ndarray  # (units, input_dim) over GF(256)
+
+    def __post_init__(self) -> None:
+        m = self.matrix
+        where = f"Send {self.src}->{self.dst}"
+        if not isinstance(m, np.ndarray) or m.ndim != 2:
+            raise PlanError(
+                f"{where}: matrix must be a 2-D ndarray, got "
+                f"{type(m).__name__} ndim={getattr(m, 'ndim', None)}",
+                rule="plan.dag.send-matrix", src=self.src, dst=self.dst,
+            )
+        if m.dtype != np.uint8:
+            raise PlanError(
+                f"{where}: matrix must be uint8 over GF(256), got {m.dtype}",
+                rule="plan.dag.send-matrix", src=self.src, dst=self.dst,
+                dtype=str(m.dtype),
+            )
+        if m.shape[1] == 0:
+            raise PlanError(
+                f"{where}: matrix has no input columns (shape {m.shape}) — "
+                f"the sender would combine zero subblocks",
+                rule="plan.dag.send-matrix", src=self.src, dst=self.dst,
+                shape=m.shape,
+            )
 
     @property
     def units(self) -> int:
@@ -74,8 +99,9 @@ class RepairPlan:
         return sorted({s.src for s in self.relayer_sends})
 
     # ------------------------------------------------------------ accounting
-    def traffic_blocks(self) -> dict[str, float]:
-        """Inner-/cross-rack repair traffic in units of blocks (B = 1)."""
+    def traffic_blocks(self) -> dict[str, Any]:
+        """Inner-/cross-rack repair traffic in units of blocks (B = 1);
+        ``per_relayer_cross`` is a nested {relayer: blocks} map."""
         rack = self.placement.rack_of
         target_rack = rack(self.failed)
         inner = 0.0
@@ -137,8 +163,12 @@ class RepairPlan:
             rows.append(gf.gf_matmul(s.matrix, np.concatenate(inputs, axis=0)))
             order.extend([s.src] * s.units)
         if order != self.target_order:
-            raise AssertionError(
-                f"target order mismatch: {order} vs {self.target_order}"
+            raise PlanError(
+                f"target order mismatch: canonical {order} vs recorded "
+                f"{self.target_order}",
+                rule="plan.dag.target-order",
+                canonical=order, recorded=list(self.target_order),
+                failed=self.failed,
             )
         return np.concatenate(rows, axis=0)
 

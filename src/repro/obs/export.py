@@ -68,7 +68,7 @@ def spans_from_chrome(obj: dict[str, Any]) -> list[Span]:
     for ev in obj["traceEvents"]:
         if ev.get("ph") == "M" and ev.get("name") == "thread_name":
             names[ev["tid"]] = ev["args"]["name"]
-    spans = []
+    spans: list[Span] = []
     for ev in obj["traceEvents"]:
         if ev.get("ph") != "X":
             continue
@@ -87,7 +87,7 @@ def spans_from_chrome(obj: dict[str, Any]) -> list[Span]:
 
 
 def summary(tracer: Tracer) -> dict[str, Any]:
-    by_name: dict[str, dict[str, float]] = {}
+    by_name: dict[str, dict[str, Any]] = {}  # count/*_us floats + "cat" str
     for s in tracer.spans:
         agg = by_name.setdefault(s.name, {
             "count": 0, "total_us": 0.0, "max_us": 0.0, "cat": s.cat
@@ -97,7 +97,7 @@ def summary(tracer: Tracer) -> dict[str, Any]:
         agg["max_us"] = max(agg["max_us"], s.dur_us)
     for agg in by_name.values():
         agg["mean_us"] = agg["total_us"] / agg["count"]
-    out = {"trace": tracer.name, "spans": by_name}
+    out: dict[str, Any] = {"trace": tracer.name, "spans": by_name}
     out.update(tracer.metrics.as_dict())
     return out
 

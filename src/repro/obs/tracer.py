@@ -66,7 +66,7 @@ class Span:
                 f"start={self.start_us:.1f}us, dur={self.dur_us:.1f}us)")
 
 
-class _NullSpan:
+class _NullSpan(contextlib.AbstractContextManager["_NullSpan"]):
     """Shared no-op stand-in returned while tracing is disabled."""
 
     __slots__ = ()
@@ -77,7 +77,7 @@ class _NullSpan:
     def __enter__(self) -> "_NullSpan":
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc: object) -> None:
         pass
 
 
@@ -89,6 +89,7 @@ class Tracer:
 
     def __init__(self, name: str = "trace"):
         self.name = name
+        self._prev: Tracer | None = None  # tracer shadowed by this activation
         self.epoch_ns = time.monotonic_ns()
         self.spans: list[Span] = []
         self.metrics = MetricSet(clock_us=self.now_us)
@@ -189,7 +190,7 @@ class Tracer:
             _active = self
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc: object) -> None:
         global _active
         with _active_lock:
             _active = self._prev
@@ -213,7 +214,8 @@ def tracing(name: str = "trace") -> Iterator[Tracer]:
         yield t
 
 
-def span(name: str, cat: str = "", **attrs: Any):
+def span(name: str, cat: str = "",
+         **attrs: Any) -> contextlib.AbstractContextManager[Any]:
     """Span on the active tracer; a shared no-op when tracing is off."""
     t = _active
     if t is None:

@@ -1,0 +1,457 @@
+"""Tests for `repro.check` — the plan verifier and the AST linter.
+
+Deterministic tests run everywhere; property tests (random valid plans
+always PASS, random mutations are caught by the rule that owns them)
+additionally want hypothesis and are skipped without it.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.check import PlanError
+from repro.check.ast_rules import (
+    L_HOST_CAST,
+    L_HOST_SYNC,
+    L_MUT_DEFAULT,
+    L_NP_IN_JIT,
+    L_SPAN_WITH,
+    L_TRACED_IF,
+    lint_source,
+    lint_tree,
+)
+from repro.check.plan import (
+    MUTATIONS,
+    PLAN_RULES,
+    R_COEFFICIENTS,
+    R_DECODE_RANK,
+    R_DECODE_SHAPE,
+    R_RELAYER_INPUT,
+    R_SEND_MATRIX,
+    R_SRC_SURVIVING,
+    R_TARGET_ORDER,
+    REGISTRY_SWEEP,
+    mutate_plan,
+    run_registry_sweep,
+    self_test,
+    verify_code,
+    verify_plan,
+    verify_stripwise,
+)
+from repro.check.report import FAIL, PASS, WARN, CheckReport, Finding
+from repro.core.codes import make_code
+from repro.core.repair import TARGET, Send
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - env without hypothesis
+    HAVE_HYPOTHESIS = False
+
+_CODES: dict = {}
+
+
+def get_code(family, n, k, r):
+    key = (family, n, k, r)
+    if key not in _CODES:
+        _CODES[key] = make_code(family, n, k, r)
+    return _CODES[key]
+
+
+def fails(findings, rule):
+    return [f for f in findings if f.rule == rule and f.severity == FAIL]
+
+
+# ------------------------------------------------------------ Send validation
+
+
+def test_send_rejects_non_2d_matrix():
+    with pytest.raises(PlanError, match=r"Send 3->-1.*2-D"):
+        Send(3, TARGET, np.zeros(4, dtype=np.uint8))
+
+
+def test_send_rejects_wrong_dtype():
+    with pytest.raises(PlanError, match=r"Send 1->2.*uint8"):
+        Send(1, 2, np.zeros((2, 2), dtype=np.int32))
+
+
+def test_send_rejects_empty_input_dim():
+    with pytest.raises(PlanError, match=r"Send 0->-1.*no input columns"):
+        Send(0, TARGET, np.zeros((2, 0), dtype=np.uint8))
+
+
+def test_send_error_carries_context():
+    try:
+        Send(5, 7, np.zeros((1, 0), dtype=np.uint8))
+    except PlanError as e:
+        assert e.rule == "plan.dag.send-matrix"
+        assert e.context["src"] == 5 and e.context["dst"] == 7
+    else:
+        pytest.fail("expected PlanError")
+
+
+def test_target_order_mismatch_raises_typed_plan_error():
+    code = get_code("DRC", 6, 4, 3)
+    plan = code.repair_plan(0)
+    bad = dataclasses.replace(
+        plan, target_order=[plan.target_order[0] + 1] + plan.target_order[1:]
+    )
+    with pytest.raises(PlanError) as ei:
+        bad._target_unit_coeffs(code.all_node_coeffs())
+    assert ei.value.rule == "plan.dag.target-order"
+    assert ei.value.context["recorded"][0] == plan.target_order[0] + 1
+
+
+# ------------------------------------------------------------- plan verifier
+
+VERIFY_SET = [
+    ("DRC", 6, 4, 3),  # family 1
+    ("DRC", 6, 3, 3),  # family 2
+    ("RS", 6, 4, 3),
+    ("MSR", 6, 4, 6),
+]
+
+
+@pytest.mark.parametrize("family,n,k,r", VERIFY_SET)
+def test_valid_plans_pass_every_rule(family, n, k, r):
+    code = get_code(family, n, k, r)
+    for rec in verify_code(code):
+        assert rec.status in (PASS, WARN), (
+            f"{rec.label} failed={rec.failed}: "
+            f"{[f.as_dict() for f in rec.findings if f.severity == FAIL]}"
+        )
+
+
+def test_verify_code_records_traffic_info():
+    recs = verify_code(get_code("DRC", 6, 4, 3))
+    assert len(recs) == 6
+    for rec in recs:
+        assert rec.info["cross_rack_blocks"] == pytest.approx(2.0)
+        assert rec.info["rules_checked"] == len(PLAN_RULES)
+
+
+def test_stripwise_generator_layer_passes():
+    rec = verify_stripwise(get_code("DRC", 9, 6, 3))
+    assert rec.status == PASS
+    assert rec.failed is None
+    assert rec.info["sets"] == 3
+
+
+@pytest.mark.parametrize("mutation", sorted(MUTATIONS))
+def test_mutation_caught_by_owning_rule(mutation):
+    code = get_code("DRC", 6, 4, 3)
+    plan = code.repair_plan(0)
+    owner = MUTATIONS[mutation]
+    mutated = mutate_plan(plan, mutation)
+    assert fails(verify_plan(code, mutated), owner), (
+        f"{mutation} not caught by {owner}"
+    )
+    # the original (cached) plan must be untouched by the mutation
+    assert not [f for f in verify_plan(code, plan) if f.severity == FAIL]
+
+
+def test_self_test_catches_every_mutation():
+    assert all(caught for _, _, caught in self_test())
+
+
+def test_zeroed_decode_row_owned_by_decode_rank():
+    code = get_code("DRC", 6, 3, 3)  # family 2 this time
+    plan = code.repair_plan(1)
+    d = plan.decode.copy()
+    d[1, :] = 0
+    bad = dataclasses.replace(plan, decode=d)
+    findings = verify_plan(code, bad)
+    assert fails(findings, R_DECODE_RANK)
+    assert fails(findings, R_COEFFICIENTS)  # and it no longer decodes
+
+
+def test_decode_shape_rule():
+    code = get_code("RS", 6, 4, 3)
+    plan = code.repair_plan(0)
+    bad = dataclasses.replace(plan, decode=plan.decode[:, :-1])
+    assert fails(verify_plan(code, bad), R_DECODE_SHAPE)
+
+
+def test_src_surviving_rule_catches_failed_node_as_helper():
+    code = get_code("RS", 6, 4, 3)
+    plan = code.repair_plan(0)
+    sends = list(plan.node_sends)
+    s = sends[0]
+    sends[0] = Send(plan.failed, s.dst, s.matrix.copy())
+    bad = dataclasses.replace(plan, node_sends=sends)
+    assert fails(verify_plan(code, bad), R_SRC_SURVIVING)
+
+
+def test_relayer_input_width_rule():
+    code = get_code("DRC", 6, 4, 3)
+    plan = code.repair_plan(0)
+    sends = list(plan.relayer_sends)
+    s = sends[0]
+    sends[0] = Send(s.src, s.dst, s.matrix[:, :-1].copy())
+    bad = dataclasses.replace(plan, relayer_sends=sends)
+    assert fails(verify_plan(code, bad), R_RELAYER_INPUT)
+
+
+def test_non_uint8_matrix_flagged_statically():
+    code = get_code("RS", 6, 4, 3)
+    plan = code.repair_plan(0)
+    sends = list(plan.node_sends)
+    s = sends[0]
+    bad_send = object.__new__(Send)  # bypass __post_init__, as a
+    object.__setattr__(bad_send, "src", s.src)  # deserializer bug would
+    object.__setattr__(bad_send, "dst", s.dst)
+    object.__setattr__(bad_send, "matrix", s.matrix.astype(np.int32))
+    sends[0] = bad_send
+    bad = dataclasses.replace(plan, node_sends=sends)
+    assert fails(verify_plan(code, bad), R_SEND_MATRIX)
+
+
+# ------------------------------------------------------------- registry sweep
+
+
+def test_registry_sweep_covers_every_family_and_three_shapes():
+    assert set(REGISTRY_SWEEP) == {"DRC-f1", "DRC-f2", "RS", "MSR-Clay",
+                                   "stripwise"}
+    for family, shapes in REGISTRY_SWEEP.items():
+        assert len(shapes) >= 3, family
+
+
+def test_small_sweep_all_pass():
+    sweep = {
+        "DRC-f1": [("DRC", 6, 4, 3)],
+        "DRC-f2": [("DRC", 6, 3, 3)],
+        "RS": [("RS", 6, 4, 6)],
+        "MSR-Clay": [("MSR", 6, 4, 6)],
+        "stripwise": [("DRC", 6, 4, 3)],
+    }
+    records = run_registry_sweep(sweep)
+    # plan records: 6 + 6 + 6 + 6 failed nodes, + 1 stripwise record
+    assert len(records) == 25
+    assert all(r.status in (PASS, WARN) for r in records)
+
+
+# ------------------------------------------------------------- report model
+
+
+def test_report_json_schema(tmp_path):
+    sweep = {"RS": [("RS", 6, 4, 6)]}
+    report = CheckReport(plan_records=run_registry_sweep(sweep))
+    path = report.write_json(str(tmp_path / "report.json"))
+    with open(path) as f:
+        obj = json.load(f)
+    assert obj["version"] == 1
+    assert obj["summary"]["FAIL"] == 0
+    rec = obj["plan_records"][0]
+    assert {"label", "family", "n", "k", "r", "failed", "status",
+            "findings"} <= set(rec)
+    assert rec["status"] == "PASS"
+
+
+def test_finding_rejects_bad_severity():
+    with pytest.raises(ValueError):
+        Finding("x", "BOGUS", "msg")
+
+
+# ----------------------------------------------------------------- AST lint
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def test_lint_np_call_in_jit():
+    src = (
+        "import jax, numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return np.sum(x)\n"
+    )
+    assert L_NP_IN_JIT in rules_of(lint_source(src))
+
+
+def test_lint_np_in_plain_function_ok():
+    src = "import numpy as np\ndef f(x):\n    return np.sum(x)\n"
+    assert lint_source(src) == []
+
+
+def test_lint_traced_if_in_jit_and_static_exemption():
+    src = (
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('flag',))\n"
+        "def f(x, flag):\n"
+        "    if flag:\n"
+        "        return x\n"
+        "    if x > 0:\n"
+        "        return -x\n"
+        "    return x\n"
+    )
+    findings = [f for f in lint_source(src) if f.rule == L_TRACED_IF]
+    assert len(findings) == 1  # only the `if x > 0` (flag is static)
+    assert findings[0].witness["line"] == 6
+
+
+def test_lint_host_cast_in_jit():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return float(x.sum())\n"
+    )
+    assert L_HOST_CAST in rules_of(lint_source(src))
+
+
+def test_lint_pallas_kernel_kwonly_params_are_static():
+    src = (
+        "import functools\n"
+        "from jax.experimental import pallas as pl\n"
+        "def _kern(x_ref, o_ref, *, causal: bool):\n"
+        "    if causal:\n"
+        "        o_ref[...] = x_ref[...]\n"
+        "def run(x):\n"
+        "    return pl.pallas_call(functools.partial(_kern, causal=True))(x)\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_lint_pallas_kernel_positional_if_flagged():
+    src = (
+        "from jax.experimental import pallas as pl\n"
+        "def _kern(x_ref, o_ref):\n"
+        "    if x_ref:\n"
+        "        o_ref[...] = 0\n"
+        "def run(x):\n"
+        "    return pl.pallas_call(_kern)(x)\n"
+    )
+    assert L_TRACED_IF in rules_of(lint_source(src))
+
+
+def test_lint_block_until_ready_in_library():
+    src = "import jax\ndef f(y):\n    jax.block_until_ready(y)\n"
+    assert L_HOST_SYNC in rules_of(lint_source(src, "src/repro/serve/x.py"))
+    # benchmarks are exempt
+    assert lint_source(src, "benchmarks/run.py") == []
+
+
+def test_lint_pragma_suppression():
+    src = (
+        "import jax\n"
+        "def f(y):\n"
+        "    jax.block_until_ready(y)  # check: ignore[host-sync]\n"
+    )
+    assert lint_source(src, "src/repro/x.py") == []
+
+
+def test_lint_span_outside_with():
+    src = (
+        "from repro import obs\n"
+        "def f():\n"
+        "    s = obs.span('leak')\n"
+        "    return 1\n"
+    )
+    assert L_SPAN_WITH in rules_of(lint_source(src))
+
+
+def test_lint_span_inside_with_and_forwarding_ok():
+    src = (
+        "from repro import obs\n"
+        "def f():\n"
+        "    with obs.span('ok'):\n"
+        "        pass\n"
+        "def g():\n"
+        "    return obs.span('forwarded')\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_lint_mutable_default_arg_and_dataclass_field():
+    src = (
+        "from dataclasses import dataclass, field\n"
+        "def f(x=[]):\n"
+        "    return x\n"
+        "@dataclass\n"
+        "class C:\n"
+        "    a: list = []\n"
+        "    b: list = field(default_factory=list)\n"
+    )
+    findings = [f for f in lint_source(src) if f.rule == L_MUT_DEFAULT]
+    assert len(findings) == 2  # f's default and C.a; C.b is fine
+
+
+def test_lint_own_tree_is_clean():
+    import repro
+
+    root = repro.__path__[0]
+    bad = [
+        f
+        for rec in lint_tree(root)
+        for f in rec.findings
+        if f.severity == FAIL
+    ]
+    assert bad == [], [f.message for f in bad]
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def test_run_check_cli_ast_only(tmp_path, capsys):
+    from tools.run_check import main
+
+    out = tmp_path / "report.json"
+    rc = main(["--ast-only", "--json", str(out)])
+    assert rc == 0
+    obj = json.loads(out.read_text())
+    assert obj["summary"]["FAIL"] == 0
+    assert capsys.readouterr().out.count("AST lint") == 1
+
+
+def test_run_check_cli_self_test():
+    from tools.run_check import main
+
+    assert main(["--self-test"]) == 0
+
+
+# ------------------------------------------------------- property tests
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestProperties:
+        @settings(max_examples=15, deadline=None)
+        @given(
+            cfg=st.sampled_from(VERIFY_SET),
+            data=st.data(),
+        )
+        def test_valid_plans_always_pass(self, cfg, data):
+            family, n, k, r = cfg
+            code = get_code(family, n, k, r)
+            failed = data.draw(st.integers(0, code.n - 1))
+            plan = code.repair_plan(failed)
+            assert not [
+                f for f in verify_plan(code, plan) if f.severity == FAIL
+            ]
+
+        @settings(max_examples=15, deadline=None)
+        @given(
+            mutation=st.sampled_from(sorted(MUTATIONS)),
+            failed=st.integers(0, 5),
+        )
+        def test_mutations_always_caught(self, mutation, failed):
+            code = get_code("DRC", 6, 4, 3)
+            plan = code.repair_plan(failed)
+            try:
+                mutated = mutate_plan(plan, mutation)
+            except ValueError:
+                return  # mutation not applicable to this plan shape
+            assert fails(verify_plan(code, mutated), MUTATIONS[mutation])
+
+else:  # keep the skip visible in test output rather than silently absent
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_properties_skipped():
+        pass
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,1 @@
+"""Repo tooling: link checker, static-verification CLI (`run_check`)."""

@@ -1,0 +1,111 @@
+"""CLI for ``repro.check``: plan verification sweep + AST lint.
+
+Usage (from the repo root; ``src`` is added to ``sys.path`` automatically)::
+
+    python -m tools.run_check                  # full gate: sweep + lint
+    python -m tools.run_check --json out.json  # also write the report
+    python -m tools.run_check --plans-only
+    python -m tools.run_check --ast-only
+    python -m tools.run_check --self-test      # mutation test: corrupted
+                                               # plans must FAIL with the
+                                               # owning rule id
+
+Exit code 0 iff nothing FAILed (WARNs are reported but do not gate).
+This is the CI ``check`` job's entry point.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.check.ast_rules import lint_tree  # noqa: E402
+from repro.check.plan import self_test, sweep_report  # noqa: E402
+from repro.check.report import FAIL, WARN, CheckReport  # noqa: E402
+
+
+def _print_plan_summary(report: CheckReport) -> None:
+    by_label: dict[str, list[str]] = {}
+    for rec in report.plan_records:
+        by_label.setdefault(f"{rec.family:<10} {rec.label}", []).append(
+            rec.status
+        )
+    print(f"{'family':<10} {'code':<14} {'plans':>5}  status")
+    for label, statuses in sorted(by_label.items()):
+        worst = FAIL if FAIL in statuses else (WARN if WARN in statuses else "PASS")
+        print(f"{label:<25} {len(statuses):>5}  {worst}")
+
+
+def _print_failures(report: CheckReport) -> None:
+    for rec in (*report.plan_records, *report.lint_records):
+        for f in rec.findings:
+            if f.severity in (FAIL, WARN):
+                where = getattr(rec, "label", None) or getattr(rec, "path", "")
+                failed = getattr(rec, "failed", None)
+                loc = f"{where}" + (f" failed={failed}" if failed is not None else "")
+                print(f"  {f.severity} {f.rule} [{loc}] {f.message}")
+
+
+def run_self_test() -> int:
+    print("mutation self-test: corrupted plans must FAIL with the owning rule")
+    results = self_test()
+    ok = True
+    for mutation, owner, caught in results:
+        mark = "caught" if caught else "MISSED"
+        print(f"  {mutation:<26} -> {owner:<32} {mark}")
+        ok &= caught
+    if not ok:
+        print("SELF-TEST FAILED: a deliberate defect went undetected")
+        return 1
+    print(f"self-test OK: {len(results)}/{len(results)} mutations caught")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.run_check",
+        description="Static verification: repair-plan sweep + AST lint.",
+    )
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--plans-only", action="store_true",
+                    help="skip the AST lint")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="skip the plan sweep")
+    ap.add_argument("--lint-root", default=str(REPO_ROOT / "src" / "repro"),
+                    help="source tree to lint (default: src/repro)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the mutation self-test and exit")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return run_self_test()
+
+    report = CheckReport()
+    if not args.ast_only:
+        print("plan verifier: registry sweep (all families x shapes x "
+              "failed nodes)")
+        report.plan_records = sweep_report().plan_records
+        _print_plan_summary(report)
+    if not args.plans_only:
+        print(f"AST lint: {args.lint_root}")
+        report.lint_records = lint_tree(args.lint_root)
+        flagged = sum(len(r.findings) for r in report.lint_records)
+        print(f"  {len(report.lint_records)} files, {flagged} finding(s)")
+
+    counts = report.counts()
+    print(f"records: {counts['PASS']} PASS / {counts['WARN']} WARN / "
+          f"{counts['FAIL']} FAIL")
+    _print_failures(report)
+    if args.json:
+        report.write_json(args.json)
+        print(f"report -> {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
