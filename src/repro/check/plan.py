@@ -69,6 +69,7 @@ R_TOLERANCE = "plan.placement.tolerance"
 R_STRIP_SYSTEMATIC = "code.stripwise.systematic"
 R_STRIP_SET_MDS = "code.stripwise.set-mds"
 R_STRIP_DISTINCT = "code.stripwise.sets-distinct"
+R_SPMD_CROSS = "spmd.cross_bytes"
 
 
 def rule(rule_id: str) -> Callable[[RuleFn], RuleFn]:
@@ -400,6 +401,51 @@ def _check_relayer_balance(code: ErasureCode, plan: RepairPlan) -> list[Finding]
     return []
 
 
+@rule(R_SPMD_CROSS)
+def _check_spmd_cross_bytes(code: ErasureCode, plan: RepairPlan) -> list[Finding]:
+    """The static SPMD collective schedule (repro.dist.collectives) must
+    ship exactly the plan's cross-rack units — and, where the family has
+    a closed form, exactly that many: a lowering that silently adds or
+    drops cross-pod collective-permute traffic breaks the compiled-HLO
+    version of the Eq. (3) claim even if the plan itself is optimal."""
+    from repro.dist.collectives import expected_cross_units, plan_to_spmd
+
+    try:
+        spec = plan_to_spmd(code, plan)
+    except Exception as e:  # a malformed plan must fail loudly, not lower
+        return [Finding(
+            R_SPMD_CROSS, FAIL,
+            f"plan_to_spmd raised {type(e).__name__}: {e}",
+            {"failed": plan.failed},
+        )]
+    out: list[Finding] = []
+    scheduled = spec.cross_units
+    planned = expected_cross_units(plan)
+    if scheduled != planned:
+        out.append(Finding(
+            R_SPMD_CROSS, FAIL,
+            f"SPMD schedule ships {scheduled} cross-pod units but the "
+            f"plan accounts {planned} (blocks * alpha)",
+            {"scheduled": scheduled, "planned": planned,
+             "failed": plan.failed},
+        ))
+    try:
+        closed = code.theoretical_cross_rack_blocks()
+    except NotImplementedError:
+        closed = None
+    if closed is not None:
+        want = round(closed * plan.alpha)
+        if scheduled != want:
+            out.append(Finding(
+                R_SPMD_CROSS, FAIL,
+                f"SPMD schedule ships {scheduled} cross-pod units != "
+                f"family closed form {want} ({closed} blocks * alpha)",
+                {"scheduled": scheduled, "closed_form_units": want,
+                 "failed": plan.failed},
+            ))
+    return out
+
+
 # --------------------------------------------------------------------------
 # Part 4 — placement invariants
 # --------------------------------------------------------------------------
@@ -575,16 +621,43 @@ def verify_stripwise(code: StripwiseRS, *, family: str = "stripwise") -> PlanRec
     )
 
 
+# ---------------------------------------------------------- SPMD lowering
+
+
+def verify_spmd(code: ErasureCode, *, family: str = "spmd") -> PlanRecord:
+    """Lower every failed node's plan through ``plan_to_spmd`` and check
+    the static collective schedule (rule ``spmd.cross_bytes``): one
+    record per code summarizing scheduled cross-pod units per node."""
+    from repro.dist.collectives import plan_to_spmd
+
+    findings: list[Finding] = []
+    cross_by_node: dict[str, int] = {}
+    for f in range(code.n):
+        plan = code.repair_plan(f)
+        findings.extend(_check_spmd_cross_bytes(code, plan))
+        try:
+            cross_by_node[str(f)] = plan_to_spmd(code, plan).cross_units
+        except Exception:
+            cross_by_node[str(f)] = -1  # the rule above reported it
+    return PlanRecord(
+        label=repr(code), family=family, n=code.n, k=code.k, r=code.r,
+        failed=None, findings=findings,
+        info={"alpha": code.alpha, "cross_units_by_node": cross_by_node},
+    )
+
+
 # --------------------------------------------------------------- the sweep
 
 # Every registered family × ≥ 3 (n, k, r) shapes.  "stripwise" rows check
-# the shared generator layer both DRC families build on.
+# the shared generator layer both DRC families build on; "spmd" rows
+# check the repro.dist.collectives lowering of DRC-f1 / DRC-f2 / RS.
 REGISTRY_SWEEP: dict[str, list[tuple[str, int, int, int]]] = {
     "DRC-f1": [("DRC", 6, 4, 3), ("DRC", 8, 6, 4), ("DRC", 9, 6, 3)],
     "DRC-f2": [("DRC", 6, 3, 3), ("DRC", 9, 5, 3), ("DRC", 12, 7, 3)],
     "RS": [("RS", 6, 4, 6), ("RS", 8, 6, 4), ("RS", 9, 6, 3)],
     "MSR-Clay": [("MSR", 6, 4, 6), ("MSR", 6, 3, 3), ("MSR", 8, 6, 4)],
     "stripwise": [("DRC", 6, 4, 3), ("DRC", 9, 6, 3), ("DRC", 9, 5, 3)],
+    "spmd": [("DRC", 9, 6, 3), ("DRC", 9, 5, 3), ("RS", 9, 6, 3)],
 }
 
 
@@ -604,6 +677,8 @@ def run_registry_sweep(
             if family == "stripwise":
                 assert isinstance(code, StripwiseRS)
                 records.append(verify_stripwise(code, family=family))
+            elif family == "spmd":
+                records.append(verify_spmd(code, family=family))
             else:
                 records.extend(verify_code(code, family=family))
     return records
@@ -625,6 +700,7 @@ MUTATIONS: dict[str, str] = {
     "drop_relayer_rank": R_UNIT_RANK,
     "cross_rack_helper": R_HELPER_RACKS,
     "wrong_placement": R_TOLERANCE,
+    "inflate_cross_unit": R_SPMD_CROSS,
 }
 
 
@@ -678,6 +754,16 @@ def mutate_plan(plan: RepairPlan, mutation: str) -> RepairPlan:
 
         flat = Placement(plan.placement.n, plan.placement.n)
         return dataclasses.replace(plan, placement=flat)
+    if mutation == "inflate_cross_unit":
+        # one relayer ships a redundant extra unit: the plan *and* the
+        # SPMD schedule both inflate consistently, so only the closed-
+        # form comparison in spmd.cross_bytes pins the regression.
+        sends = list(plan.relayer_sends)
+        if not sends:
+            raise ValueError("plan has no relayer sends")
+        s = sends[0]
+        sends[0] = Send(s.src, s.dst, np.vstack([s.matrix, s.matrix[:1]]))
+        return dataclasses.replace(plan, relayer_sends=sends)
     raise ValueError(f"unknown mutation {mutation!r}")
 
 

@@ -1,0 +1,402 @@
+"""Lower a ``RepairPlan`` to one SPMD program over a ``(pod, node)`` mesh.
+
+The paper's DoubleR workflow (§2.2) maps onto a device mesh with the
+rack structure made explicit: ``pod`` is the rack axis (r racks) and
+``node`` the within-rack axis (w = n/r nodes); device (p, j) holds the
+(alpha, sub) payload of node ``p*w + j``, matching
+``Placement.rack_of``.  The lowering is two-phase:
+
+* :func:`plan_to_spmd` compiles the plan's GF(256) DAG into a *static*
+  :class:`SpmdRepairSpec` — stacked per-node NodeEncode matrices,
+  per-relayer RelayerEncode matrices re-indexed onto the rack-local
+  unit pool, and integer gather schedules for the cross-pod ship and
+  the target decode.  Pure numpy; no devices needed, which is what the
+  ``spmd.cross_bytes`` verifier rule exploits.
+* :func:`make_spmd_repair` turns a spec into a ``shard_map`` body:
+
+  - **inner** — NodeEncode then ``all_gather`` over the ``node`` axis
+    *only* (twice when relayers exist: node units, then relayer
+    units), so intra-rack aggregation never crosses a pod boundary;
+  - **cross** — one ``lax.ppermute`` over ``pod`` per source rack,
+    statically sliced to exactly that rack's cross units, so the
+    compiled HLO's collective-permute bytes equal
+    ``plan.traffic_blocks()["cross_rack_blocks"] * alpha * sub`` — the
+    Eq. (3) bound as a property of the *collective schedule*, not just
+    the plan;
+  - **decode** — the collector (device (target_pod, 0), i.e. output
+    row ``target_pod * w``) gathers its canonical unit order and
+    applies the decode matrix.
+
+:func:`spmd_repair` runs one stripe; :func:`spmd_node_recovery` runs S
+stripes in a single program with the relayer role rotating per stripe
+(paper §5.2 load balancing).  Both self-instrument through
+``repro.obs`` with the same stage names / byte counters as
+``core/repair.py``, so traced SPMD runs cross-check against the plan's
+symbolic accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro import obs
+from repro.core.code_base import ErasureCode
+from repro.core.repair import TARGET, RepairPlan, Send
+
+from . import compat as _compat
+
+_compat.install()
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdRepairSpec:
+    """Static lowering of one RepairPlan onto the (pod, node) mesh."""
+
+    family: str
+    n: int
+    k: int
+    r: int
+    alpha: int
+    w: int  # nodes per pod (mesh "node" axis size)
+    failed: int
+    target_pod: int  # rack of the failed node; collector = (target_pod, 0)
+    rel_idx: np.ndarray  # (num_relayers,) int32 — relayer node ids
+    node_mats: np.ndarray  # (n, nu, alpha) uint8 — stacked NodeEncode rows
+    relayer_mats: np.ndarray  # (n, ru, alpha + w*nu) uint8, pool-indexed
+    cross_idx: tuple[tuple[int, ...], ...]  # per pod: pool rows it ships
+    target_idx: tuple[int, ...]  # decode input rows in pool2, canonical order
+    decode: np.ndarray  # (alpha, total units) uint8
+    inner_units: int  # units moved intra-rack (traffic_blocks classification)
+
+    @property
+    def nu(self) -> int:
+        return int(self.node_mats.shape[1])
+
+    @property
+    def ru(self) -> int:
+        return int(self.relayer_mats.shape[1])
+
+    @property
+    def cross_units(self) -> int:
+        """Units the collective-permute schedule ships across pods."""
+        return sum(len(rows) for rows in self.cross_idx)
+
+    def traffic_bytes(self, sub_bytes: int) -> dict[str, int]:
+        """Scheduled bytes by scope — comparable to plan.traffic_blocks()
+        via bytes == blocks * alpha * sub_bytes."""
+        return {
+            "inner_rack": self.inner_units * sub_bytes,
+            "cross_rack": self.cross_units * sub_bytes,
+        }
+
+
+def _node_send_layout(plan: RepairPlan) -> dict[int, list[tuple[Send, int]]]:
+    """Per node: its NodeEncode sends in canonical order (dst ascending,
+    TARGET=-1 first) with each send's row offset in the stacked matrix."""
+    by_src: dict[int, list[Send]] = {}
+    for s in plan.node_sends:
+        by_src.setdefault(s.src, []).append(s)
+    layout: dict[int, list[tuple[Send, int]]] = {}
+    for src, sends in by_src.items():
+        sends.sort(key=lambda s: s.dst)
+        off = 0
+        entries: list[tuple[Send, int]] = []
+        for s in sends:
+            entries.append((s, off))
+            off += s.units
+        layout[src] = entries
+    return layout
+
+
+def plan_to_spmd(code: ErasureCode, plan: RepairPlan) -> SpmdRepairSpec:
+    """Compile a RepairPlan into a static SPMD spec (pure numpy)."""
+    pl = plan.placement
+    n, r, w = pl.n, pl.r, pl.nodes_per_rack
+    alpha = plan.alpha
+    target_pod = pl.rack_of(plan.failed)
+    layout = _node_send_layout(plan)
+
+    # --- NodeEncode: one zero-padded (nu, alpha) matrix per node
+    nu = max(
+        (sum(s.units for s, _ in entries) for entries in layout.values()),
+        default=0,
+    )
+    nu = max(nu, 1)
+    node_mats = np.zeros((n, nu, alpha), np.uint8)
+    send_off: dict[tuple[int, int], int] = {}
+    for src, entries in layout.items():
+        for s, off in entries:
+            node_mats[src, off:off + s.units, :] = s.matrix
+            send_off[(s.src, s.dst)] = off
+
+    def y_row(src: int, off: int) -> int:
+        # row of node `src`'s unit `off` in the rack-local gathered pool
+        return (src % w) * nu + off
+
+    # --- RelayerEncode: columns re-indexed from [own alpha ++ received
+    # units in _relayer_input_order] onto [own alpha ++ the full rack
+    # pool], so one matrix shape serves every relayer.
+    rsends = sorted(plan.relayer_sends, key=lambda s: s.src)
+    ru = max((s.units for s in rsends), default=0)
+    relayer_mats = np.zeros((n, ru, alpha + w * nu), np.uint8)
+    for s in rsends:
+        relayer_mats[s.src, :s.units, :alpha] = s.matrix[:, :alpha]
+        col = alpha
+        for ns in plan._relayer_input_order(s.src):
+            off = send_off[(ns.src, ns.dst)]
+            for t in range(ns.units):
+                relayer_mats[s.src, :s.units, alpha + y_row(ns.src, off + t)] = (
+                    s.matrix[:s.units, col]
+                )
+                col += 1
+
+    def z_row(src: int, row: int) -> int:
+        return w * nu + (src % w) * ru + row
+
+    # --- canonical target-unit order (matches build_target_order):
+    # node sends to TARGET sorted by src, then relayer sends by src.
+    units: list[tuple[int, int]] = []  # (src node, pool row in its pod)
+    for s in sorted(
+        (x for x in plan.node_sends if x.dst == TARGET), key=lambda x: x.src
+    ):
+        off = send_off[(s.src, TARGET)]
+        for t in range(s.units):
+            units.append((s.src, y_row(s.src, off + t)))
+    for s in rsends:
+        for t in range(s.units):
+            units.append((s.src, z_row(s.src, t)))
+
+    # --- cross-pod schedule: pool rows each non-target pod must ship,
+    # in canonical-unit order (so received blocks concatenate cleanly)
+    pool_rows = w * nu + (w * ru if ru else 0)
+    cross_lists: list[list[int]] = [[] for _ in range(r)]
+    cross_pos: dict[int, int] = {}  # unit index -> position in its pod list
+    for idx, (src, row) in enumerate(units):
+        q = pl.rack_of(src)
+        if q != target_pod:
+            cross_pos[idx] = len(cross_lists[q])
+            cross_lists[q].append(row)
+
+    bases: dict[int, int] = {}
+    base = pool_rows
+    for q in range(r):
+        if q == target_pod or not cross_lists[q]:
+            continue
+        bases[q] = base
+        base += len(cross_lists[q])
+
+    target_idx: list[int] = []
+    for idx, (src, row) in enumerate(units):
+        q = pl.rack_of(src)
+        if q == target_pod:
+            target_idx.append(row)
+        else:
+            target_idx.append(bases[q] + cross_pos[idx])
+
+    # --- inner-rack unit count, same classification as traffic_blocks()
+    inner = 0
+    for s in plan.node_sends:
+        dst_rack = target_pod if s.dst == TARGET else pl.rack_of(s.dst)
+        if pl.rack_of(s.src) == dst_rack:
+            inner += s.units
+    for s in rsends:
+        if pl.rack_of(s.src) == target_pod:
+            inner += s.units
+
+    return SpmdRepairSpec(
+        family=code.name,
+        n=n, k=code.k, r=r, alpha=alpha, w=w,
+        failed=plan.failed,
+        target_pod=target_pod,
+        rel_idx=np.asarray([s.src for s in rsends], np.int32),
+        node_mats=node_mats,
+        relayer_mats=relayer_mats,
+        cross_idx=tuple(tuple(rows) for rows in cross_lists),
+        target_idx=tuple(target_idx),
+        decode=np.asarray(plan.decode, np.uint8),
+        inner_units=inner,
+    )
+
+
+def make_spmd_repair(spec: SpmdRepairSpec) -> Callable[[Any], Any]:
+    """Build the shard_map body: (1, alpha, sub) per device in/out.
+
+    The returned function must run inside ``shard_map`` over a mesh
+    with axes ``("pod", "node")`` of sizes (spec.r, spec.w).  Output
+    row ``target_pod * w`` (device (target_pod, 0)) carries the
+    reconstructed payload; every other row is zero.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.gf_jax import gf_matmul_jnp
+
+    w, nu, ru = spec.w, spec.nu, spec.ru
+    node_mats = jnp.asarray(spec.node_mats)
+    relayer_mats = jnp.asarray(spec.relayer_mats) if ru else None
+    cross = [
+        (q, jnp.asarray(np.asarray(rows, np.int32)))
+        for q, rows in enumerate(spec.cross_idx)
+        if q != spec.target_pod and rows
+    ]
+    target_idx = jnp.asarray(np.asarray(spec.target_idx, np.int32))
+    decode = jnp.asarray(spec.decode)
+
+    def repair(x: Any) -> Any:
+        p = jax.lax.axis_index("pod")
+        j = jax.lax.axis_index("node")
+        dev = p * w + j  # global node id of this device
+        own = x[0]  # (alpha, sub)
+
+        # inner: NodeEncode, then aggregate over the node axis only
+        a = jax.lax.dynamic_index_in_dim(node_mats, dev, 0, keepdims=False)
+        y = gf_matmul_jnp(a, own)  # (nu, sub)
+        pool = jax.lax.all_gather(y, "node").reshape(w * nu, -1)
+        if relayer_mats is not None:
+            # RelayerEncode consumes [own subblocks ++ rack pool]; its
+            # units are pooled in-rack too (rows w*nu .. w*nu + w*ru)
+            rm = jax.lax.dynamic_index_in_dim(relayer_mats, dev, 0,
+                                              keepdims=False)
+            z = gf_matmul_jnp(rm, jnp.concatenate([own, pool], axis=0))
+            zf = jax.lax.all_gather(z, "node").reshape(w * ru, -1)
+            pool = jnp.concatenate([pool, zf], axis=0)
+
+        # cross: each source pod ships exactly its scheduled units to
+        # the target pod — one collective-permute per source pod, so
+        # compiled cross-pod bytes == sum(len(rows)) * sub
+        recvs = [
+            jax.lax.ppermute(
+                jnp.take(pool, rows, axis=0), "pod",
+                [(q, spec.target_pod)],
+            )
+            for q, rows in cross
+        ]
+        pool2 = jnp.concatenate([pool, *recvs], axis=0) if recvs else pool
+
+        # decode on the collector; other devices emit zeros
+        rec = gf_matmul_jnp(decode, jnp.take(pool2, target_idx, axis=0))
+        is_collector = jnp.logical_and(p == spec.target_pod, j == 0)
+        return jnp.where(is_collector, rec, jnp.zeros_like(rec))[None]
+
+    return repair
+
+
+def _check_mesh(spec: SpmdRepairSpec, mesh: Any) -> None:
+    shape = dict(mesh.shape)
+    want = {"pod": spec.r, "node": spec.w}
+    if shape != want:
+        raise ValueError(
+            f"mesh axes {shape} do not match the code's rack layout {want}"
+        )
+
+
+def _record_schedule(spec: SpmdRepairSpec, sub_bytes: int) -> None:
+    """Book the static schedule into the obs counters — same names and
+    scope classification as RepairPlan._record_send, so a traced SPMD
+    run cross-checks against traffic_blocks() exactly."""
+    moved = spec.traffic_bytes(sub_bytes)
+    obs.counter_add("repair.bytes.inner_rack", moved["inner_rack"],
+                    stage="spmd")
+    obs.counter_add("repair.bytes.cross_rack", moved["cross_rack"],
+                    stage="spmd")
+    for q, rows in enumerate(spec.cross_idx):
+        if rows and q != spec.target_pod:
+            obs.counter_add("repair.units_cross", len(rows), pod=str(q))
+
+
+def spmd_repair(
+    code: ErasureCode, failed: int, payloads: Any, mesh: Any
+) -> tuple[Any, SpmdRepairSpec]:
+    """Repair one stripe as a single SPMD program.
+
+    payloads: (n, alpha, sub) uint8, node-major (row i = node i's
+    payload; the failed row is ignored).  Returns the (n, alpha, sub)
+    output — row ``spec.target_pod * spec.w`` is the reconstruction —
+    plus the static spec.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    plan = code.repair_plan(failed)
+    spec = plan_to_spmd(code, plan)
+    _check_mesh(spec, mesh)
+    sub_bytes = int(payloads.shape[-1])
+    fn = jax.shard_map(
+        make_spmd_repair(spec), mesh=mesh,
+        in_specs=P(("pod", "node")), out_specs=P(("pod", "node")),
+    )
+    # the three stages execute fused inside one XLA program, so the
+    # stage spans carry the static schedule (unit counts) and the
+    # counters carry the bytes; wall time lives on the decode span,
+    # which encloses the actual dispatch
+    with obs.span("repair.spmd", cat="repair", failed=failed,
+                  family=spec.family, alpha=spec.alpha, sub_bytes=sub_bytes):
+        with obs.span("repair.inner", cat="repair", units=spec.inner_units):
+            _record_schedule(spec, sub_bytes)
+        with obs.span("repair.cross", cat="repair", units=spec.cross_units,
+                      permutes=len([r for r in spec.cross_idx if r])):
+            pass
+        with obs.span("repair.decode", cat="repair",
+                      units=len(spec.target_idx)):
+            out = jax.jit(fn)(payloads)
+    return out, spec
+
+
+def spmd_node_recovery(
+    code: ErasureCode, failed: int, payloads: Any, mesh: Any
+) -> tuple[Any, list[SpmdRepairSpec]]:
+    """Recover a whole node — S stripes — in one SPMD program.
+
+    payloads: (S, n, alpha, sub) uint8.  Stripe s uses
+    ``repair_plan(failed, rotation=s)`` so the relayer role rotates
+    across the helper nodes of each remote rack (paper §5.2: node-level
+    repair load balance).  Returns ((S, n, alpha, sub), specs).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    n_stripes = int(payloads.shape[0])
+    specs: list[SpmdRepairSpec] = []
+    bodies: list[Callable[[Any], Any]] = []
+    for s in range(n_stripes):
+        spec = plan_to_spmd(code, code.repair_plan(failed, rotation=s))
+        _check_mesh(spec, mesh)
+        specs.append(spec)
+        bodies.append(make_spmd_repair(spec))
+    sub_bytes = int(payloads.shape[-1])
+
+    def body(x: Any) -> Any:  # (S, 1, alpha, sub) per device
+        return jnp.stack([fn(x[s]) for s, fn in enumerate(bodies)], axis=0)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=P(None, ("pod", "node")),
+        out_specs=P(None, ("pod", "node")),
+    )
+    relayer_loads: dict[str, int] = {}
+    for spec in specs:
+        for rel in spec.rel_idx.tolist():
+            relayer_loads[str(rel)] = relayer_loads.get(str(rel), 0) + 1
+    with obs.span("repair.spmd_node_recovery", cat="repair", failed=failed,
+                  family=specs[0].family if specs else "", stripes=n_stripes,
+                  distinct_relayer_sets=len(
+                      {tuple(sp.rel_idx.tolist()) for sp in specs}
+                  )):
+        for spec in specs:
+            _record_schedule(spec, sub_bytes)
+        out = jax.jit(fn)(payloads)
+    return out, specs
+
+
+def cross_units_scheduled(spec: SpmdRepairSpec) -> int:
+    """Cross-pod units the compiled schedule will move (for verifiers)."""
+    return spec.cross_units
+
+
+def expected_cross_units(plan: RepairPlan) -> int:
+    """Cross-rack units by the plan's own accounting (blocks * alpha)."""
+    blocks = float(plan.traffic_blocks()["cross_rack_blocks"])
+    return round(blocks * plan.alpha)

@@ -1,0 +1,141 @@
+"""jax API shims so one distribution layer runs on jax 0.4.x and 0.5+.
+
+The sharded code paths (``repro.dist``, ``repro.train.xent``,
+``repro.models.mlp``, the launch modules) are written against the
+current public API — ``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.lax.pvary``, ``jax.typeof`` — which
+jax 0.4.x does not expose yet.  Rather than version-forking every call
+site, :func:`install` backfills each missing symbol with a
+semantically equivalent shim built on the APIs 0.4.x *does* have
+(``jax.experimental.shard_map``, concrete ``Mesh`` contexts, the
+replication-check-off path where the vma type system does not exist).
+
+Every shim is ``hasattr``-guarded: on a jax that already provides the
+symbol, ``install`` is a no-op, so upgrading jax silently switches the
+repo onto the native implementations (ROADMAP "revisit when jax is
+upgraded" item).  ``install`` is idempotent and runs at ``import
+repro`` time so subprocess entry points get the shims no matter which
+submodule they import first.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+
+_AMBIENT: list[Any] = []  # mesh stack maintained by the set_mesh shim
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (jax >= 0.5)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _shim_axis_type() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        setattr(jax.sharding, "AxisType", _AxisType)
+
+
+def _shim_make_mesh() -> None:
+    native: Any = getattr(jax, "make_mesh", None)
+    if native is not None and "axis_types" in inspect.signature(native).parameters:
+        return
+    if native is None:
+        def _base(axis_shapes: Any, axis_names: Any) -> Any:
+            import numpy as np
+
+            count = math.prod(axis_shapes)
+            devs = np.asarray(jax.devices()[:count]).reshape(axis_shapes)
+            return jax.sharding.Mesh(devs, axis_names)
+        base: Callable[..., Any] = _base
+    else:
+        base = native
+
+    def make_mesh(axis_shapes: Any, axis_names: Any, *,
+                  axis_types: Any = None, **kwargs: Any) -> Any:
+        # 0.4.x has no axis-type annotations; Auto is its only behaviour,
+        # so the argument is accepted and dropped.
+        del axis_types
+        return base(axis_shapes, axis_names, **kwargs)
+
+    setattr(jax, "make_mesh", make_mesh)
+
+
+def _shim_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        if not hasattr(jax.sharding, "get_abstract_mesh"):
+            # partial backport (unlikely): expose the getter side too
+            setattr(jax.sharding, "get_abstract_mesh", ambient_mesh)
+        return
+
+    @contextlib.contextmanager
+    def set_mesh(mesh: Any) -> Iterator[Any]:
+        _AMBIENT.append(mesh)
+        try:
+            yield mesh
+        finally:
+            _AMBIENT.pop()
+
+    setattr(jax, "set_mesh", set_mesh)
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        setattr(jax.sharding, "get_abstract_mesh", ambient_mesh)
+
+
+def ambient_mesh() -> Any:
+    """The mesh installed by the ``set_mesh`` shim (None when unset).
+
+    On 0.4.x this returns the *concrete* Mesh — exactly what
+    ``jax.experimental.shard_map`` and ``NamedSharding`` want — while
+    callers written against ``get_abstract_mesh()`` keep working
+    because a concrete Mesh satisfies the same ``.shape`` /
+    ``.axis_names`` / ``.empty`` protocol.
+    """
+    return _AMBIENT[-1] if _AMBIENT else None
+
+
+def _shim_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f: Callable[..., Any], *, mesh: Any = None,
+                  in_specs: Any, out_specs: Any, **kwargs: Any) -> Any:
+        # check_vma / check_rep: 0.4.x predates the vma type system, and
+        # its static replication checker rejects valid programs that the
+        # vma rules accept (psum-of-partial patterns), so it stays off.
+        kwargs.pop("check_vma", None)
+        if mesh is None:
+            mesh = ambient_mesh()
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+    setattr(jax, "shard_map", shard_map)
+
+
+def _shim_typeof() -> None:
+    if not hasattr(jax, "typeof"):
+        setattr(jax, "typeof", lambda x: jax.core.get_aval(x))
+
+
+def _shim_pvary() -> None:
+    if not hasattr(jax.lax, "pvary"):
+        # pvary only adjusts the vma *type*; with the vma system absent
+        # the value-level semantics are the identity.
+        setattr(jax.lax, "pvary", lambda x, axis_names: x)
+
+
+def install() -> None:
+    """Install every missing shim (idempotent; no-op on current jax)."""
+    _shim_axis_type()
+    _shim_make_mesh()
+    _shim_set_mesh()
+    _shim_shard_map()
+    _shim_typeof()
+    _shim_pvary()

@@ -137,14 +137,14 @@ def ambient_mesh():
 
 
 def constrain(x: jax.Array, *names: str | None) -> jax.Array:
-    """Logical sharding constraint on an activation (resolved lazily).
+    """Logical sharding constraint on an activation.
 
-    A constraint is advisory: when the distribution layer is absent
-    (single-process runs, bare test environments) it degrades to a
-    no-op rather than failing the whole model stack.
+    Resolved through the ambient rules + mesh by
+    ``repro.dist.sharding.logical_constraint``: a real
+    ``with_sharding_constraint`` under a mesh, a no-op without one
+    (with a one-time warning if rules were explicitly set — silent
+    degradation would hide a misconfigured launch).
     """
-    try:
-        from repro.dist.sharding import logical_constraint
-    except ImportError:
-        return x
+    from repro.dist.sharding import logical_constraint
+
     return logical_constraint(x, names)

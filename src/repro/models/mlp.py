@@ -205,7 +205,9 @@ def _moe_spmd(p, cfg, x, mesh):
             # inferred — reduce to prove replication
             out = jax.lax.pmean(out, "model")
         aux = info[-1]
-        missing = tuple(a for a in all_axes if a not in jax.typeof(aux).vma)
+        # vma is absent pre-0.5 (the pvary shim is the identity there)
+        vma = getattr(jax.typeof(aux), "vma", frozenset())
+        missing = tuple(a for a in all_axes if a not in vma)
         if missing:
             aux = jax.lax.pvary(aux, missing)
         aux = jax.lax.pmean(aux, all_axes)

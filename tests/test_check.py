@@ -213,7 +213,7 @@ def test_non_uint8_matrix_flagged_statically():
 
 def test_registry_sweep_covers_every_family_and_three_shapes():
     assert set(REGISTRY_SWEEP) == {"DRC-f1", "DRC-f2", "RS", "MSR-Clay",
-                                   "stripwise"}
+                                   "stripwise", "spmd"}
     for family, shapes in REGISTRY_SWEEP.items():
         assert len(shapes) >= 3, family
 

@@ -11,11 +11,7 @@ import jax
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "repro.dist.sharding",
-    reason="distribution layer not built yet (see ROADMAP open items)",
-)
-from repro.dist.sharding import make_rules, resolve_spec
+from repro.dist.sharding import Rules, make_rules, resolve_spec
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -67,6 +63,65 @@ def test_fsdp_rules_shard_embed_over_data():
     mesh = FakeMesh({"data": 16, "model": 16})
     s = resolve_spec(("embed", "ffn"), (8192, 22528), mesh, make_rules("fsdp"))
     assert s == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_resolve_spec_empty_rules_replicates():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    s = resolve_spec(("batch", "embed"), (64, 64), mesh, Rules("none", False, {}))
+    assert s == jax.sharding.PartitionSpec(None, None)
+
+
+def test_resolve_spec_unknown_logical_name_replicates():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    s = resolve_spec(("made_up", "batch"), (64, 64), mesh, make_rules("tp"))
+    assert s[0] is None and s[1] == "data"
+
+
+def test_resolve_spec_skips_size_one_mesh_axis():
+    # a trivial (size-1) axis already means replication; keeping the dim
+    # unsharded leaves the entry canonical (None, not a no-op axis name)
+    mesh = FakeMesh({"data": 1, "model": 4})
+    s = resolve_spec(("embed", "ffn"), (64, 64), mesh, make_rules("fsdp"))
+    assert s == jax.sharding.PartitionSpec(None, "model")
+
+
+def test_resolve_spec_arity_mismatch_raises():
+    with pytest.raises(ValueError):
+        resolve_spec(("batch",), (4, 4), FakeMesh({"data": 2}), make_rules("tp"))
+
+
+def test_make_rules_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        make_rules("3d")
+
+
+def test_make_rules_multi_pod_prepends_pod_to_batch():
+    rules = make_rules("tp", multi_pod=True)
+    assert rules.mesh_axes("batch") == ("pod", "data")
+    mesh = FakeMesh({"pod": 2, "data": 4, "model": 4})
+    s = resolve_spec(("batch", "ffn"), (64, 64), mesh, rules)
+    assert s == jax.sharding.PartitionSpec(("pod", "data"), "model")
+
+
+def test_spmd_spec_traffic_matches_plan_blocks():
+    """plan_to_spmd's static schedule must account for exactly the bytes
+    the plan DAG claims, layer by layer (the obs counters reuse this)."""
+    from repro.core.codes import make_code
+    from repro.dist.collectives import expected_cross_units, plan_to_spmd
+
+    sub = 512
+    for fam, n, k, r in [("DRC", 9, 6, 3), ("DRC", 9, 5, 3), ("RS", 9, 6, 3)]:
+        code = make_code(fam, n, k, r)
+        for failed in (0, n - 1):
+            plan = code.repair_plan(failed)
+            spec = plan_to_spmd(code, plan)
+            blocks = plan.traffic_blocks()
+            got = spec.traffic_bytes(sub)
+            assert got["cross_rack"] == expected_cross_units(plan) * sub
+            assert got["cross_rack"] == round(
+                blocks["cross_rack_blocks"] * code.alpha) * sub
+            assert got["inner_rack"] == round(
+                blocks["inner_rack_blocks"] * code.alpha) * sub
 
 
 # --------------------------------------------------------- SPMD repair (9 dev)

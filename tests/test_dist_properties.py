@@ -1,0 +1,70 @@
+"""Property tests for repro.dist.sharding rule resolution.
+
+Invariants (hypothesis-driven over modes, meshes, and shapes):
+* a resolved spec never uses the same mesh axis twice;
+* every sharded dimension divides evenly by the product of the mesh
+  axis sizes it shards over.
+"""
+import jax
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.dist.sharding import MODES, make_rules, resolve_spec
+from repro.models.common import LOGICAL
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH_SHAPES = (
+    {"data": 4, "model": 8},
+    {"pod": 2, "data": 4, "model": 4},
+    {"data": 16, "model": 16},
+    {"data": 3, "model": 5},
+    {"data": 1, "model": 4},
+)
+DIM_SIZES = (1, 2, 3, 8, 15, 24, 64, 240)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    mode=st.sampled_from(MODES),
+    multi_pod=st.booleans(),
+    mesh_shape=st.sampled_from(MESH_SHAPES),
+    dims=st.lists(
+        st.tuples(st.sampled_from(LOGICAL + (None,)), st.sampled_from(DIM_SIZES)),
+        min_size=1,
+        max_size=4,
+    ),
+)
+def test_resolved_spec_invariants(mode, multi_pod, mesh_shape, dims):
+    names = tuple(name for name, _ in dims)
+    shape = tuple(size for _, size in dims)
+    rules = make_rules(mode, multi_pod=multi_pod)
+    spec = resolve_spec(names, shape, FakeMesh(mesh_shape), rules)
+
+    assert isinstance(spec, jax.sharding.PartitionSpec)
+    assert len(spec) == len(dims)
+    used = []
+    for entry, (name, size) in zip(spec, dims):
+        if entry is None:
+            continue
+        assert name is not None  # None dims must stay unsharded
+        group = entry if isinstance(entry, tuple) else (entry,)
+        used.extend(group)
+        divisor = 1
+        for axis in group:
+            assert axis in mesh_shape  # never invents a mesh axis
+            assert axis in rules.mesh_axes(name)  # only rule candidates
+            divisor *= mesh_shape[axis]
+        assert divisor > 1  # size-1 axes are skipped, not recorded
+        assert size % divisor == 0  # even divisibility
+    assert len(used) == len(set(used))  # no mesh axis used twice
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
