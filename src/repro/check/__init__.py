@@ -1,16 +1,22 @@
 """``repro.check`` — static verification of repair plans + AST linting.
 
-Two halves, both payload-free:
+Three layers, all payload-free:
 
 * **Plan verifier** (`repro.check.plan`) — proves every registered
   code's repair plans well-formed, symbolically decodable, bandwidth-
   optimal and placement-safe, straight from their GF(256) matrices.
+* **Lowered-layer analyzer** (`repro.check.lowered`) — proves the
+  lowering preserved the plan's guarantees: SPMD collective schedules
+  (partial-permutation validity, byte accounting, rotation balance),
+  sharding-rule tables resolved against every model config, and Pallas
+  kernel BlockSpec geometry swept symbolically over the full grid plus
+  a GF(2^8) dtype-safety AST pass.
 * **AST linter** (`repro.check.ast_rules`) — a dependency-free pass
   over the source tree catching the JAX/Pallas pitfalls that bite this
   codebase (numpy inside jit, traced `if`s, host syncs, leaked spans,
-  mutable defaults).
+  mutable defaults, stale suppression pragmas).
 
-Both run in CI via ``python -m tools.run_check`` and gate merges; see
+All run in CI via ``python -m tools.run_check`` and gate merges; see
 docs/architecture.md §"Static verification" for the rule catalog.
 
 ``repro.core.repair`` imports `PlanError` from ``repro.check.errors``
@@ -28,11 +34,14 @@ __all__ = [
     "PlanError",
     # report model
     "FAIL", "PASS", "WARN", "CheckReport", "Finding", "LintRecord",
-    "PlanRecord",
+    "LoweredRecord", "PlanRecord",
     # plan verifier
     "MUTATIONS", "PLAN_RULES", "REGISTRY_SWEEP", "mutate_plan",
     "run_registry_sweep", "self_test", "sweep_report", "verify_code",
     "verify_plan", "verify_stripwise",
+    # lowered-layer analyzer
+    "LOWERED_MUTATIONS", "LOWERED_RULES", "LOWERED_SWEEP",
+    "lowered_report", "run_lowered_sweep", "self_test_lowered",
     # AST linter
     "ALL_LINT_RULES", "lint_file", "lint_paths", "lint_source", "lint_tree",
 ]
@@ -45,6 +54,10 @@ _LAZY = {
     "mutate_plan": "plan", "run_registry_sweep": "plan", "self_test": "plan",
     "sweep_report": "plan", "verify_code": "plan", "verify_plan": "plan",
     "verify_stripwise": "plan",
+    "LoweredRecord": "report",
+    "LOWERED_MUTATIONS": "lowered", "LOWERED_RULES": "lowered",
+    "LOWERED_SWEEP": "lowered", "lowered_report": "lowered",
+    "run_lowered_sweep": "lowered", "self_test_lowered": "lowered",
     "ALL_LINT_RULES": "ast_rules", "lint_file": "ast_rules",
     "lint_paths": "ast_rules", "lint_source": "ast_rules",
     "lint_tree": "ast_rules",

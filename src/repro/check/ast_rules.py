@@ -22,15 +22,23 @@ Rules (ids are stable; see docs/architecture.md for the catalog):
 * ``ast.mutable-default`` — mutable default arguments on functions and
   mutable class-level defaults on dataclass fields (use
   ``field(default_factory=...)``) (FAIL).
+* ``ast.stale-pragma`` — a ``# check: ignore[...]`` pragma that no
+  longer suppresses anything: the offending code was fixed or moved but
+  the suppression stayed behind, silently masking future regressions on
+  that line (WARN).
 
 Suppression: append ``# check: ignore`` (everything) or
 ``# check: ignore[rule, rule]`` (specific rules, with or without the
-``ast.`` prefix) to the offending line.
+``ast.`` prefix) to the offending line.  Pragmas are recognized only in
+real comments (tokenize-level), so pragma examples inside docstrings —
+like the ones above — are inert.
 """
 from __future__ import annotations
 
 import ast
+import io
 import re
+import tokenize
 from pathlib import Path
 from typing import Iterable
 
@@ -42,10 +50,11 @@ L_HOST_CAST = "ast.jit-host-cast"
 L_HOST_SYNC = "ast.host-sync"
 L_SPAN_WITH = "ast.span-no-with"
 L_MUT_DEFAULT = "ast.mutable-default"
+L_STALE_PRAGMA = "ast.stale-pragma"
 
 ALL_LINT_RULES = (
     L_NP_IN_JIT, L_TRACED_IF, L_HOST_CAST, L_HOST_SYNC, L_SPAN_WITH,
-    L_MUT_DEFAULT,
+    L_MUT_DEFAULT, L_STALE_PRAGMA,
 )
 
 _PRAGMA = re.compile(r"#\s*check:\s*ignore(?:\[([^\]]*)\])?")
@@ -168,6 +177,8 @@ class _Linter(ast.NodeVisitor):
         self.path = path
         self.lines = lines
         self.findings: list[Finding] = []
+        # pragma line -> rules a pragma on that line actually suppressed
+        self.pragma_used: dict[int, set[str]] = {}
         self.kernel_names: set[str] = set()
         # stack of (is_jit_context, static_param_names, dynamic_param_names)
         self._jit_stack: list[tuple[bool, set[str], set[str]]] = []
@@ -199,9 +210,13 @@ class _Linter(ast.NodeVisitor):
         if not m:
             return False
         if m.group(1) is None:
+            self.pragma_used.setdefault(line, set()).add(rule)
             return True
         wanted = {r.strip() for r in m.group(1).split(",") if r.strip()}
-        return rule in wanted or rule.removeprefix("ast.") in wanted
+        if rule in wanted or rule.removeprefix("ast.") in wanted:
+            self.pragma_used.setdefault(line, set()).add(rule)
+            return True
+        return False
 
     def _in_jit(self) -> bool:
         return any(flag for flag, _, _ in self._jit_stack)
@@ -333,6 +348,68 @@ class _Linter(ast.NodeVisitor):
 
 
 # --------------------------------------------------------------------------
+# Stale pragmas
+# --------------------------------------------------------------------------
+
+
+def _pragma_comments(src: str) -> list[tuple[int, str | None]]:
+    """(line, rules-or-None) for every *real* pragma comment.
+
+    Tokenize-level on purpose: a raw line regex would flag pragma
+    examples embedded in docstrings (this module's own docstring has
+    two).  Returns None rules for blanket ``# check: ignore``.
+    """
+    out: list[tuple[int, str | None]] = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(src).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _PRAGMA.search(tok.string)
+            if m:
+                out.append((tok.start[0], m.group(1)))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass  # unparsable files are already ast.syntax findings
+    return out
+
+
+def _stale_pragma_findings(
+    src: str, path: str, pragma_used: dict[int, set[str]]
+) -> list[Finding]:
+    """WARN for every pragma (or listed rule) that suppressed nothing."""
+    out: list[Finding] = []
+    for line, rules_text in _pragma_comments(src):
+        used = pragma_used.get(line, set())
+        if rules_text is None:
+            if used:
+                continue
+            msg = (
+                f"{path}:{line}: stale `# check: ignore` — no rule fires "
+                f"on this line anymore; drop the pragma so future "
+                f"regressions are not silently masked"
+            )
+            out.append(Finding(
+                L_STALE_PRAGMA, WARN, msg,
+                {"path": path, "line": line, "rules": []},
+            ))
+            continue
+        listed = [r.strip() for r in rules_text.split(",") if r.strip()]
+        used_short = {r.removeprefix("ast.") for r in used}
+        stale = [
+            r for r in listed
+            if r not in used and r.removeprefix("ast.") not in used_short
+        ]
+        if stale:
+            out.append(Finding(
+                L_STALE_PRAGMA, WARN,
+                f"{path}:{line}: stale pragma — rule(s) {stale} no longer "
+                f"fire on this line; drop them from the ignore list",
+                {"path": path, "line": line, "rules": stale},
+            ))
+    return out
+
+
+# --------------------------------------------------------------------------
 # Entry points
 # --------------------------------------------------------------------------
 
@@ -346,7 +423,9 @@ def lint_source(src: str, path: str = "<string>") -> list[Finding]:
             "ast.syntax", FAIL, f"{path}:{e.lineno or 0}: {e.msg}",
             {"path": path, "line": e.lineno or 0},
         )]
-    findings = _Linter(path, src.splitlines()).run(tree)
+    linter = _Linter(path, src.splitlines())
+    findings = linter.run(tree)
+    findings.extend(_stale_pragma_findings(src, path, linter.pragma_used))
     return sorted(findings, key=lambda f: int(f.witness.get("line", 0)))
 
 

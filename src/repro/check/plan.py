@@ -651,13 +651,36 @@ def verify_spmd(code: ErasureCode, *, family: str = "spmd") -> PlanRecord:
 # Every registered family × ≥ 3 (n, k, r) shapes.  "stripwise" rows check
 # the shared generator layer both DRC families build on; "spmd" rows
 # check the repro.dist.collectives lowering of DRC-f1 / DRC-f2 / RS.
+# Every family carries a fourth shape exercising r > 3 placements
+# (more racks than the minimal layering), so rack-count generalization
+# is swept, not just the paper's 3-rack walkthroughs.  DRC-f2 is the
+# structural exception — its construction (k = 2n/3 - 1) fixes r = 3,
+# so its fourth shape scales n instead.
 REGISTRY_SWEEP: dict[str, list[tuple[str, int, int, int]]] = {
-    "DRC-f1": [("DRC", 6, 4, 3), ("DRC", 8, 6, 4), ("DRC", 9, 6, 3)],
-    "DRC-f2": [("DRC", 6, 3, 3), ("DRC", 9, 5, 3), ("DRC", 12, 7, 3)],
-    "RS": [("RS", 6, 4, 6), ("RS", 8, 6, 4), ("RS", 9, 6, 3)],
-    "MSR-Clay": [("MSR", 6, 4, 6), ("MSR", 6, 3, 3), ("MSR", 8, 6, 4)],
-    "stripwise": [("DRC", 6, 4, 3), ("DRC", 9, 6, 3), ("DRC", 9, 5, 3)],
-    "spmd": [("DRC", 9, 6, 3), ("DRC", 9, 5, 3), ("RS", 9, 6, 3)],
+    "DRC-f1": [
+        ("DRC", 6, 4, 3), ("DRC", 8, 6, 4), ("DRC", 9, 6, 3),
+        ("DRC", 12, 9, 4),
+    ],
+    "DRC-f2": [
+        ("DRC", 6, 3, 3), ("DRC", 9, 5, 3), ("DRC", 12, 7, 3),
+        ("DRC", 15, 9, 3),
+    ],
+    "RS": [
+        ("RS", 6, 4, 6), ("RS", 8, 6, 4), ("RS", 9, 6, 3),
+        ("RS", 8, 4, 4),
+    ],
+    "MSR-Clay": [
+        ("MSR", 6, 4, 6), ("MSR", 6, 3, 3), ("MSR", 8, 6, 4),
+        ("MSR", 8, 4, 4),
+    ],
+    "stripwise": [
+        ("DRC", 6, 4, 3), ("DRC", 9, 6, 3), ("DRC", 9, 5, 3),
+        ("DRC", 12, 9, 4),
+    ],
+    "spmd": [
+        ("DRC", 9, 6, 3), ("DRC", 9, 5, 3), ("RS", 9, 6, 3),
+        ("DRC", 8, 6, 4),
+    ],
 }
 
 

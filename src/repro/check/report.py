@@ -2,10 +2,12 @@
 
 One `Finding` per rule violation (or informational note), one record per
 verified artifact — a (code, failed-node) repair plan, a code-level
-structural check, or a linted source file — and one `CheckReport`
-aggregating a whole run.  The JSON schema (version 1) is stable and
-documented in docs/architecture.md; CI uploads it as an artifact so a
-failed gate can be diagnosed without re-running the sweep.
+structural check, a lowered artifact (SPMD schedule, sharding-rule
+table, Pallas kernel geometry), or a linted source file — and one
+`CheckReport` aggregating a whole run.  The JSON schema (version 2;
+version 1 lacked ``lowered_records``) is stable and documented in
+docs/architecture.md; CI uploads it as an artifact so a failed gate can
+be diagnosed without re-running the sweep.
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ FAIL = "FAIL"
 
 _SEVERITY_ORDER = {PASS: 0, WARN: 1, FAIL: 2}
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -84,6 +86,44 @@ class PlanRecord:
 
 
 @dataclass
+class LoweredRecord:
+    """Verification outcome for one *lowered* artifact.
+
+    The plan verifier sees GF matrices on a DAG; this record covers what
+    comes out of the lowering layers instead — a static SPMD collective
+    schedule (``SpmdRepairSpec``), a sharding-rule table resolved
+    against a model config, or a Pallas kernel's BlockSpec geometry /
+    source.  ``family`` is the lowered sweep key (``spmd-schedule``,
+    ``shard-rules``, ``pallas-kernel``); ``artifact`` names the thing
+    analyzed, e.g. ``SpmdRepairSpec(DRC(6,4,3), failed=0)``.
+    """
+
+    label: str
+    family: str
+    artifact: str
+    findings: list[Finding] = field(default_factory=list)
+    info: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def status(self) -> str:
+        worst = PASS
+        for f in self.findings:
+            if _SEVERITY_ORDER[f.severity] > _SEVERITY_ORDER[worst]:
+                worst = f.severity
+        return worst
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "label": self.label,
+            "family": self.family,
+            "artifact": self.artifact,
+            "status": self.status,
+            "findings": [f.as_dict() for f in self.findings],
+            "info": _jsonable(self.info),
+        }
+
+
+@dataclass
 class LintRecord:
     """AST-lint outcome for one source file."""
 
@@ -108,15 +148,19 @@ class LintRecord:
 
 @dataclass
 class CheckReport:
-    """Aggregate of one ``repro.check`` run (plan sweep + AST lint)."""
+    """Aggregate of one ``repro.check`` run (plan + lowered sweeps + lint)."""
 
     plan_records: list[PlanRecord] = field(default_factory=list)
+    lowered_records: list[LoweredRecord] = field(default_factory=list)
     lint_records: list[LintRecord] = field(default_factory=list)
+
+    def _all_records(self) -> tuple[PlanRecord | LoweredRecord | LintRecord, ...]:
+        return (*self.plan_records, *self.lowered_records, *self.lint_records)
 
     # ------------------------------------------------------------ queries
     def counts(self) -> dict[str, int]:
         out = {PASS: 0, WARN: 0, FAIL: 0}
-        for rec in (*self.plan_records, *self.lint_records):
+        for rec in self._all_records():
             out[rec.status] += 1
         return out
 
@@ -128,7 +172,7 @@ class CheckReport:
     def failures(self) -> list[Finding]:
         return [
             f
-            for rec in (*self.plan_records, *self.lint_records)
+            for rec in self._all_records()
             for f in rec.findings
             if f.severity == FAIL
         ]
@@ -140,6 +184,7 @@ class CheckReport:
             "generated_by": "repro.check",
             "summary": self.counts(),
             "plan_records": [r.as_dict() for r in self.plan_records],
+            "lowered_records": [r.as_dict() for r in self.lowered_records],
             "lint_records": [r.as_dict() for r in self.lint_records],
         }
 

@@ -83,6 +83,26 @@ class SpmdRepairSpec:
         """Units the collective-permute schedule ships across pods."""
         return sum(len(rows) for rows in self.cross_idx)
 
+    @property
+    def pool_rows(self) -> int:
+        """Rows in each pod's gathered unit pool before the cross ship."""
+        return self.w * self.nu + (self.w * self.ru if self.ru else 0)
+
+    def permute_steps(self) -> tuple[tuple[int, int, tuple[int, ...]], ...]:
+        """The declared collective-permute schedule: one ``(src_pod,
+        dst_pod, pool_rows_shipped)`` step per pod with scheduled units.
+
+        This is the artifact ``make_spmd_repair`` compiles and the
+        lowered-layer verifier (``repro.check.lowered.spmd``) analyzes —
+        both read the same steps, so a schedule the verifier proved
+        self-send-free and byte-exact is the schedule that runs.
+        """
+        return tuple(
+            (q, self.target_pod, rows)
+            for q, rows in enumerate(self.cross_idx)
+            if rows
+        )
+
     def traffic_bytes(self, sub_bytes: int) -> dict[str, int]:
         """Scheduled bytes by scope — comparable to plan.traffic_blocks()
         via bytes == blocks * alpha * sub_bytes."""
@@ -236,10 +256,12 @@ def make_spmd_repair(spec: SpmdRepairSpec) -> Callable[[Any], Any]:
     w, nu, ru = spec.w, spec.nu, spec.ru
     node_mats = jnp.asarray(spec.node_mats)
     relayer_mats = jnp.asarray(spec.relayer_mats) if ru else None
+    # declared schedule; plan_to_spmd never emits a (q, q) self-send and
+    # the lowered verifier rule lowered.spmd.permute-partial proves it
     cross = [
         (q, jnp.asarray(np.asarray(rows, np.int32)))
-        for q, rows in enumerate(spec.cross_idx)
-        if q != spec.target_pod and rows
+        for q, dst, rows in spec.permute_steps()
+        if q != dst
     ]
     target_idx = jnp.asarray(np.asarray(spec.target_idx, np.int32))
     decode = jnp.asarray(spec.decode)

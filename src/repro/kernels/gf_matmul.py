@@ -38,13 +38,73 @@ tests/test_kernels.py.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro import obs
+
+IndexMap = Callable[..., tuple[int, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGeometry:
+    """Static grid/BlockSpec geometry of one pallas_call.
+
+    This is the single source of truth for the kernel's memory schedule:
+    :func:`gf_matmul_pallas` builds its ``BlockSpec``s from it, and the
+    lowered-layer verifier (``repro.check.lowered.pallas``) sweeps the
+    same object symbolically — every grid step's block offsets are
+    evaluated against the full array shapes to prove in-bounds access
+    and write-disjointness, so a tiling bug fails the static gate
+    instead of corrupting payloads on real hardware.
+
+    Index maps follow Pallas semantics: they map a grid point to *block*
+    indices; element offsets are ``index * block_shape``.
+    """
+
+    name: str
+    grid: tuple[int, ...]
+    in_shapes: tuple[tuple[int, ...], ...]  # full operand array shapes
+    in_blocks: tuple[tuple[int, ...], ...]  # per-operand block shapes
+    in_index_maps: tuple[IndexMap, ...]
+    out_shape: tuple[int, ...]
+    out_block: tuple[int, ...]
+    out_index_map: IndexMap
+
+    def in_specs(self) -> list[pl.BlockSpec]:
+        return [
+            pl.BlockSpec(block, index_map)
+            for block, index_map in zip(self.in_blocks, self.in_index_maps)
+        ]
+
+    def out_spec(self) -> pl.BlockSpec:
+        return pl.BlockSpec(self.out_block, self.out_index_map)
+
+
+def gf_matmul_geometry(r: int, k: int, b: int, block_b: int) -> KernelGeometry:
+    """Geometry of the bitplane kernel for a (R, K) x (K, B) product.
+
+    The bit-expanded matrix block is pinned to (0, 0) on every grid step
+    (resident in VMEM); payload and output march along the byte axis in
+    ``block_b``-wide stripes.
+    """
+    if b % block_b:
+        raise ValueError(f"payload width {b} not a multiple of tile {block_b}")
+    return KernelGeometry(
+        name="gf_matmul",
+        grid=(b // block_b,),
+        in_shapes=((8 * r, 8 * k), (k, b)),
+        in_blocks=((8 * r, 8 * k), (k, block_b)),
+        in_index_maps=(lambda j: (0, 0), lambda j: (0, j)),
+        out_shape=(r, b),
+        out_block=(r, block_b),
+        out_index_map=lambda j: (0, j),
+    )
 
 
 def _gf_bitplane_kernel(mb_ref, x_ref, o_ref, *, k: int, r: int):
@@ -80,7 +140,7 @@ def gf_matmul_pallas(
     kk, b = x.shape
     if kk != k or b % block_b:
         raise ValueError(f"shape mismatch: mb {mb.shape}, x {x.shape}, tile {block_b}")
-    grid = (b // block_b,)
+    geom = gf_matmul_geometry(r, k, b, block_b)
     # Python body of a @jax.jit function: runs once per (shape, block_b)
     # signature.  The counter therefore counts *retraces* — a growing
     # value in a trace means the caller is churning compilation, which on
@@ -89,12 +149,9 @@ def gf_matmul_pallas(
                     shape=f"{r}x{k}x{b}", block_b=str(block_b))
     return pl.pallas_call(
         functools.partial(_gf_bitplane_kernel, k=k, r=r),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((r8, k8), lambda j: (0, 0)),  # matrix resident
-            pl.BlockSpec((k, block_b), lambda j: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((r, block_b), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((r, b), jnp.uint8),
+        grid=geom.grid,
+        in_specs=geom.in_specs(),
+        out_specs=geom.out_spec(),
+        out_shape=jax.ShapeDtypeStruct(geom.out_shape, jnp.uint8),
         interpret=interpret,
     )(mb, x)

@@ -17,6 +17,7 @@ from repro.check.ast_rules import (
     L_MUT_DEFAULT,
     L_NP_IN_JIT,
     L_SPAN_WITH,
+    L_STALE_PRAGMA,
     L_TRACED_IF,
     lint_source,
     lint_tree,
@@ -211,11 +212,15 @@ def test_non_uint8_matrix_flagged_statically():
 # ------------------------------------------------------------- registry sweep
 
 
-def test_registry_sweep_covers_every_family_and_three_shapes():
+def test_registry_sweep_covers_every_family_and_four_shapes():
     assert set(REGISTRY_SWEEP) == {"DRC-f1", "DRC-f2", "RS", "MSR-Clay",
                                    "stripwise", "spmd"}
     for family, shapes in REGISTRY_SWEEP.items():
-        assert len(shapes) >= 3, family
+        assert len(shapes) >= 4, family
+        if family != "DRC-f2":  # f2's construction fixes r = 3
+            assert any(r > 3 for _, _, _, r in shapes), (
+                f"{family} sweeps no r>3 placement"
+            )
 
 
 def test_small_sweep_all_pass():
@@ -241,8 +246,9 @@ def test_report_json_schema(tmp_path):
     path = report.write_json(str(tmp_path / "report.json"))
     with open(path) as f:
         obj = json.load(f)
-    assert obj["version"] == 1
+    assert obj["version"] == 2  # v2 added lowered_records
     assert obj["summary"]["FAIL"] == 0
+    assert obj["lowered_records"] == []
     rec = obj["plan_records"][0]
     assert {"label", "family", "n", "k", "r", "failed", "status",
             "findings"} <= set(rec)
@@ -365,6 +371,49 @@ def test_lint_span_inside_with_and_forwarding_ok():
     assert lint_source(src) == []
 
 
+def test_lint_stale_blanket_pragma_warns():
+    src = "x = 1  # check: ignore\n"
+    findings = [f for f in lint_source(src) if f.rule == L_STALE_PRAGMA]
+    assert len(findings) == 1
+    assert findings[0].severity == WARN
+    assert findings[0].witness["line"] == 1
+
+
+def test_lint_stale_listed_rule_warns_with_rule_names():
+    src = "x = 1  # check: ignore[host-sync]\n"
+    findings = [f for f in lint_source(src) if f.rule == L_STALE_PRAGMA]
+    assert len(findings) == 1
+    assert findings[0].witness["rules"] == ["host-sync"]
+
+
+def test_lint_used_pragma_is_not_stale():
+    src = (
+        "import jax\n"
+        "def f(y):\n"
+        "    jax.block_until_ready(y)  # check: ignore[host-sync]\n"
+    )
+    assert lint_source(src, "src/repro/x.py") == []
+
+
+def test_lint_partially_stale_pragma_flags_only_unused_rules():
+    src = (
+        "import jax\n"
+        "def f(y):\n"
+        "    jax.block_until_ready(y)  # check: ignore[host-sync, jit-np]\n"
+    )
+    findings = [
+        f for f in lint_source(src, "src/repro/x.py")
+        if f.rule == L_STALE_PRAGMA
+    ]
+    assert len(findings) == 1
+    assert findings[0].witness["rules"] == ["jit-np"]
+
+
+def test_lint_docstring_pragma_examples_are_inert():
+    src = '"""Use `# check: ignore[foo]` to suppress."""\nx = 1\n'
+    assert lint_source(src) == []
+
+
 def test_lint_mutable_default_arg_and_dataclass_field():
     src = (
         "from dataclasses import dataclass, field\n"
@@ -410,6 +459,53 @@ def test_run_check_cli_self_test():
     from tools.run_check import main
 
     assert main(["--self-test"]) == 0
+
+
+def test_run_check_cli_strict_warnings_gates_warn_only_run(tmp_path, capsys):
+    from tools.run_check import main
+
+    warny = tmp_path / "warny.py"
+    warny.write_text("x = 1  # check: ignore\n")  # stale pragma -> WARN
+    base = ["--ast-only", "--lint-root", str(tmp_path)]
+    assert main(base) == 0  # WARNs alone never gated before
+    assert main([*base, "--strict-warnings"]) == 1
+    assert "--strict-warnings" in capsys.readouterr().out
+
+
+def test_run_check_cli_lowered_only_with_baseline(tmp_path, capsys):
+    from tools.run_check import main
+
+    report = tmp_path / "lowered.json"
+    good = tmp_path / "baseline.json"
+    good.write_text('{"min_lowered_records": 1}')
+    rc = main(["--lowered-only", "--json", str(report),
+               "--baseline", str(good)])
+    assert rc == 0
+    obj = json.loads(report.read_text())
+    assert obj["plan_records"] == []
+    families = {r["family"] for r in obj["lowered_records"]}
+    assert families == {"spmd-schedule", "shard-rules", "pallas-kernel"}
+    assert all(r["status"] == "PASS" for r in obj["lowered_records"])
+
+    # a floor above the sweep width must fail the gate
+    harsh = tmp_path / "harsh.json"
+    harsh.write_text('{"min_lowered_records": 100000}')
+    capsys.readouterr()
+    assert main(["--lowered-only", "--baseline", str(harsh)]) == 1
+    assert "BASELINE REGRESSION" in capsys.readouterr().out
+
+
+def test_run_check_committed_baseline_matches_sweep():
+    """The committed floor must stay <= the actual sweep width."""
+    import pathlib
+
+    from repro.check.lowered import run_lowered_sweep
+
+    baseline = json.loads(
+        (pathlib.Path(__file__).parent.parent / "tools"
+         / "lowered_baseline.json").read_text()
+    )
+    assert len(run_lowered_sweep()) >= baseline["min_lowered_records"]
 
 
 # ------------------------------------------------------- property tests

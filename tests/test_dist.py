@@ -327,5 +327,91 @@ def test_moe_tp_with_model_sharded_tokens():
     assert "OK" in out
 
 
+# ------------------------------------------------------------- compat shims
+def test_compat_native_branch_leaves_modern_jax_untouched(monkeypatch):
+    """On a jax that already exposes the symbols (>= 0.5), install() must
+    not replace them — upgrading jax silently switches to native impls."""
+    from repro.dist import compat
+
+    native_axis_type = object()
+    native_set_mesh = object()
+    native_shard_map = object()
+    native_typeof = object()
+    native_pvary = object()
+
+    def native_make_mesh(axis_shapes, axis_names, *, axis_types=None):
+        return "native-mesh"
+
+    monkeypatch.setattr(jax.sharding, "AxisType", native_axis_type,
+                        raising=False)
+    monkeypatch.setattr(jax, "set_mesh", native_set_mesh, raising=False)
+    monkeypatch.setattr(jax, "shard_map", native_shard_map, raising=False)
+    monkeypatch.setattr(jax, "typeof", native_typeof, raising=False)
+    monkeypatch.setattr(jax.lax, "pvary", native_pvary, raising=False)
+    monkeypatch.setattr(jax, "make_mesh", native_make_mesh, raising=False)
+
+    compat.install()
+
+    assert jax.sharding.AxisType is native_axis_type
+    assert jax.set_mesh is native_set_mesh
+    assert jax.shard_map is native_shard_map
+    assert jax.typeof is native_typeof
+    assert jax.lax.pvary is native_pvary
+    assert jax.make_mesh is native_make_mesh  # has axis_types: kept
+
+
+def test_compat_shim_branch_backfills_04x_jax(monkeypatch):
+    """With the modern symbols absent (jax 0.4.x), install() must
+    backfill working shims."""
+    import jax.numpy as jnp
+
+    from repro.dist import compat
+
+    for mod, name in [
+        (jax.sharding, "AxisType"),
+        (jax, "set_mesh"),
+        (jax.sharding, "get_abstract_mesh"),
+        (jax, "shard_map"),
+        (jax, "typeof"),
+        (jax.lax, "pvary"),
+        (jax, "make_mesh"),
+    ]:
+        monkeypatch.delattr(mod, name, raising=False)
+
+    compat.install()
+
+    # AxisType enum stand-in
+    assert jax.sharding.AxisType.Auto is not None
+
+    # set_mesh maintains the ambient stack; get_abstract_mesh reads it
+    assert compat.ambient_mesh() is None
+    marker = FakeMesh({"i": 1})
+    with jax.set_mesh(marker) as m:
+        assert m is marker
+        assert jax.sharding.get_abstract_mesh() is marker
+    assert compat.ambient_mesh() is None
+
+    # typeof returns an aval carrying shape/dtype
+    aval = jax.typeof(jnp.ones((2, 3), jnp.float32))
+    assert tuple(aval.shape) == (2, 3) and aval.dtype == jnp.float32
+
+    # pvary is the value-level identity without the vma system
+    x = jnp.arange(4)
+    assert jax.lax.pvary(x, ("i",)) is x
+
+    # make_mesh accepts and drops axis_types
+    mesh = jax.make_mesh((1,), ("i",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    assert dict(mesh.shape) == {"i": 1}
+
+    # shard_map shim swallows check_vma and runs on a concrete mesh
+    real_mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("i",))
+    P = jax.sharding.PartitionSpec
+    f = jax.shard_map(lambda a: a * 2, mesh=real_mesh,
+                      in_specs=P(), out_specs=P(), check_vma=True)
+    np.testing.assert_array_equal(np.asarray(f(jnp.arange(3))),
+                                  np.arange(3) * 2)
+
+
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])

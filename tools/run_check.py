@@ -1,21 +1,28 @@
-"""CLI for ``repro.check``: plan verification sweep + AST lint.
+"""CLI for ``repro.check``: plan sweep + lowered-layer analysis + AST lint.
 
 Usage (from the repo root; ``src`` is added to ``sys.path`` automatically)::
 
-    python -m tools.run_check                  # full gate: sweep + lint
+    python -m tools.run_check                  # full gate: all three layers
     python -m tools.run_check --json out.json  # also write the report
     python -m tools.run_check --plans-only
+    python -m tools.run_check --lowered-only   # SPMD/shard/Pallas analyzers
     python -m tools.run_check --ast-only
+    python -m tools.run_check --strict-warnings  # WARNs also exit nonzero
+    python -m tools.run_check --baseline tools/lowered_baseline.json
     python -m tools.run_check --self-test      # mutation test: corrupted
-                                               # plans must FAIL with the
-                                               # owning rule id
+                                               # artifacts must FAIL with
+                                               # the owning rule id
 
-Exit code 0 iff nothing FAILed (WARNs are reported but do not gate).
-This is the CI ``check`` job's entry point.
+Exit code 0 iff nothing FAILed; with ``--strict-warnings`` a WARN-only
+run exits 1 too.  ``--baseline`` fails the run if the lowered sweep
+produced fewer records than the committed floor (a shrinking sweep means
+a family silently fell out of coverage).  This is the CI ``check``
+job's entry point.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -24,6 +31,10 @@ if str(REPO_ROOT / "src") not in sys.path:
     sys.path.insert(0, str(REPO_ROOT / "src"))
 
 from repro.check.ast_rules import lint_tree  # noqa: E402
+from repro.check.lowered import (  # noqa: E402
+    run_lowered_sweep,
+    self_test_lowered,
+)
 from repro.check.plan import self_test, sweep_report  # noqa: E402
 from repro.check.report import FAIL, WARN, CheckReport  # noqa: E402
 
@@ -40,8 +51,20 @@ def _print_plan_summary(report: CheckReport) -> None:
         print(f"{label:<25} {len(statuses):>5}  {worst}")
 
 
+def _print_lowered_summary(report: CheckReport) -> None:
+    by_family: dict[str, list[str]] = {}
+    for rec in report.lowered_records:
+        by_family.setdefault(rec.family, []).append(rec.status)
+    print(f"{'lowered family':<16} {'records':>7}  status")
+    for family, statuses in sorted(by_family.items()):
+        worst = FAIL if FAIL in statuses else (WARN if WARN in statuses else "PASS")
+        print(f"{family:<16} {len(statuses):>7}  {worst}")
+
+
 def _print_failures(report: CheckReport) -> None:
-    for rec in (*report.plan_records, *report.lint_records):
+    for rec in (
+        *report.plan_records, *report.lowered_records, *report.lint_records
+    ):
         for f in rec.findings:
             if f.severity in (FAIL, WARN):
                 where = getattr(rec, "label", None) or getattr(rec, "path", "")
@@ -56,42 +79,90 @@ def run_self_test() -> int:
     ok = True
     for mutation, owner, caught in results:
         mark = "caught" if caught else "MISSED"
-        print(f"  {mutation:<26} -> {owner:<32} {mark}")
+        print(f"  {mutation:<26} -> {owner:<36} {mark}")
         ok &= caught
+    print("lowered self-test: corrupted lowered artifacts must FAIL with "
+          "exactly the owning rule")
+    lowered = self_test_lowered()
+    for mutation, owner, caught, exclusive in lowered:
+        if not caught:
+            mark = "MISSED"
+        elif not exclusive:
+            mark = "NOT-EXCLUSIVE"
+        else:
+            mark = "caught"
+        print(f"  {mutation:<26} -> {owner:<36} {mark}")
+        ok &= caught and exclusive
+    total = len(results) + len(lowered)
     if not ok:
-        print("SELF-TEST FAILED: a deliberate defect went undetected")
+        print("SELF-TEST FAILED: a deliberate defect went undetected "
+              "(or was caught by the wrong rule)")
         return 1
-    print(f"self-test OK: {len(results)}/{len(results)} mutations caught")
+    print(f"self-test OK: {total}/{total} mutations caught "
+          f"({len(lowered)} lowered-layer, each by exactly its owner)")
+    return 0
+
+
+def _check_baseline(report: CheckReport, path: str) -> int:
+    """0 iff the lowered sweep is at least as wide as the committed floor."""
+    with open(path) as f:
+        baseline = json.load(f)
+    floor = int(baseline["min_lowered_records"])
+    got = len(report.lowered_records)
+    if got < floor:
+        print(f"BASELINE REGRESSION: lowered sweep produced {got} record(s), "
+              f"committed floor is {floor} ({path}) — a family fell out of "
+              f"coverage")
+        return 1
+    print(f"baseline OK: {got} lowered record(s) >= floor {floor}")
     return 0
 
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="tools.run_check",
-        description="Static verification: repair-plan sweep + AST lint.",
+        description="Static verification: plan sweep + lowered-layer "
+                    "analysis + AST lint.",
     )
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the machine-readable report here")
     ap.add_argument("--plans-only", action="store_true",
-                    help="skip the AST lint")
+                    help="run only the plan sweep")
+    ap.add_argument("--lowered-only", action="store_true",
+                    help="run only the lowered-layer analyzers")
     ap.add_argument("--ast-only", action="store_true",
-                    help="skip the plan sweep")
+                    help="run only the AST lint")
     ap.add_argument("--lint-root", default=str(REPO_ROOT / "src" / "repro"),
                     help="source tree to lint (default: src/repro)")
+    ap.add_argument("--strict-warnings", action="store_true",
+                    help="exit nonzero when any record WARNs, not just FAILs")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="JSON file with min_lowered_records; fail if the "
+                         "lowered sweep shrinks below it")
     ap.add_argument("--self-test", action="store_true",
-                    help="run the mutation self-test and exit")
+                    help="run the mutation self-tests and exit")
     args = ap.parse_args(argv)
 
     if args.self_test:
         return run_self_test()
 
+    only_flags = [args.plans_only, args.lowered_only, args.ast_only]
+    if sum(only_flags) > 1:
+        ap.error("--plans-only/--lowered-only/--ast-only are exclusive")
+    run_all = not any(only_flags)
+
     report = CheckReport()
-    if not args.ast_only:
+    if run_all or args.plans_only:
         print("plan verifier: registry sweep (all families x shapes x "
               "failed nodes)")
         report.plan_records = sweep_report().plan_records
         _print_plan_summary(report)
-    if not args.plans_only:
+    if run_all or args.lowered_only:
+        print("lowered-layer analysis: SPMD schedules, sharding rules, "
+              "Pallas kernel geometry")
+        report.lowered_records = run_lowered_sweep()
+        _print_lowered_summary(report)
+    if run_all or args.ast_only:
         print(f"AST lint: {args.lint_root}")
         report.lint_records = lint_tree(args.lint_root)
         flagged = sum(len(r.findings) for r in report.lint_records)
@@ -104,7 +175,14 @@ def main(argv: list[str] | None = None) -> int:
     if args.json:
         report.write_json(args.json)
         print(f"report -> {args.json}")
-    return 0 if report.ok else 1
+    rc = 0 if report.ok else 1
+    if args.baseline and (run_all or args.lowered_only):
+        rc = max(rc, _check_baseline(report, args.baseline))
+    if rc == 0 and args.strict_warnings and counts[WARN] > 0:
+        print(f"--strict-warnings: {counts[WARN]} WARN record(s) gate the "
+              f"run")
+        rc = 1
+    return rc
 
 
 if __name__ == "__main__":
