@@ -26,6 +26,13 @@ Rules (ids are stable; see docs/architecture.md for the catalog):
   longer suppresses anything: the offending code was fixed or moved but
   the suppression stayed behind, silently masking future regressions on
   that line (WARN).
+* ``ast.uninstrumented-entrypoint`` — a public function in ``serve/``
+  or ``train/`` that does host-side work (numpy / filesystem calls, or
+  mutating engine state) without ever opening an ``obs`` span or
+  recording a metric: the remaining blind spots in the observability
+  story.  Jitted/kernel functions, factories returning closures and
+  private helpers are exempt; suppress deliberate host helpers with a
+  pragma (WARN).
 
 Suppression: append ``# check: ignore`` (everything) or
 ``# check: ignore[rule, rule]`` (specific rules, with or without the
@@ -51,10 +58,11 @@ L_HOST_SYNC = "ast.host-sync"
 L_SPAN_WITH = "ast.span-no-with"
 L_MUT_DEFAULT = "ast.mutable-default"
 L_STALE_PRAGMA = "ast.stale-pragma"
+L_UNINSTRUMENTED = "ast.uninstrumented-entrypoint"
 
 ALL_LINT_RULES = (
     L_NP_IN_JIT, L_TRACED_IF, L_HOST_CAST, L_HOST_SYNC, L_SPAN_WITH,
-    L_MUT_DEFAULT, L_STALE_PRAGMA,
+    L_MUT_DEFAULT, L_STALE_PRAGMA, L_UNINSTRUMENTED,
 )
 
 _PRAGMA = re.compile(r"#\s*check:\s*ignore(?:\[([^\]]*)\])?")
@@ -62,6 +70,19 @@ _PRAGMA = re.compile(r"#\s*check:\s*ignore(?:\[([^\]]*)\])?")
 # Paths (relative, substring match) where .block_until_ready is expected:
 # benchmark/timing code blocks on results by design.
 _SYNC_EXEMPT = ("benchmarks", "examples", "tests")
+
+# Directories whose public entry points must self-instrument through
+# repro.obs (matched as whole path parts, so launch/train.py is out).
+_OBS_SCOPES = ("serve", "train")
+
+# Call prefixes that mark host-side work: the function is an entry point
+# the observability story should cover, not traced device compute.
+_HOST_WORK_PREFIXES = (
+    "np.", "numpy.", "os.", "json.", "zlib.", "time.", "io.", "shutil.",
+)
+
+# obs recording calls that count as instrumentation besides `with span`.
+_OBS_RECORDERS = ("counter_add", "gauge_set", "record_span")
 
 
 # --------------------------------------------------------------------------
@@ -176,6 +197,9 @@ class _Linter(ast.NodeVisitor):
     def __init__(self, path: str, lines: list[str]):
         self.path = path
         self.lines = lines
+        self.obs_scope = any(
+            part in _OBS_SCOPES for part in Path(path).parts
+        )
         self.findings: list[Finding] = []
         # pragma line -> rules a pragma on that line actually suppressed
         self.pragma_used: dict[int, set[str]] = {}
@@ -251,9 +275,89 @@ class _Linter(ast.NodeVisitor):
                     f"mutable default argument in {node.name}() — shared "
                     f"across calls; use None or a tuple",
                 )
+        if not is_jit:
+            self._check_uninstrumented(node)
         self._jit_stack.append((is_jit, static or set(), dynamic))
         self.generic_visit(node)
         self._jit_stack.pop()
+
+    def _check_uninstrumented(
+        self, node: ast.FunctionDef | ast.AsyncFunctionDef
+    ) -> None:
+        """WARN on public serve/train entry points with no obs hook."""
+        if not self.obs_scope or node.name.startswith("_"):
+            return
+        if self._jit_stack:  # nested function: the outer def owns the span
+            return
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _dotted(target).rsplit(".", 1)[-1] in (
+                "property", "cached_property", "staticmethod",
+            ):
+                return
+        nested = {
+            c.name
+            for c in ast.walk(node)
+            if isinstance(c, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and c is not node
+        }
+        for sub in ast.walk(node):
+            if (
+                isinstance(sub, ast.Return)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id in nested
+            ):
+                return  # factory: the closure it builds is the real step
+        if not self._does_host_work(node):
+            return  # traced device compute: a span here would be wrong
+        if self._opens_obs_hook(node):
+            return
+        self._emit(
+            L_UNINSTRUMENTED, WARN, node,
+            f"public entry point {node.name}() does host-side work but "
+            f"never opens an obs span or records a metric — instrument "
+            f"it (see core/repair.py) or suppress with a pragma",
+        )
+
+    def _does_host_work(
+        self, node: ast.FunctionDef | ast.AsyncFunctionDef
+    ) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                callee = _dotted(sub.func)
+                if callee == "open" or callee.startswith(_HOST_WORK_PREFIXES):
+                    return True
+            elif isinstance(sub, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (
+                    sub.targets
+                    if isinstance(sub, ast.Assign)
+                    else [sub.target]
+                )
+                for t in targets:
+                    for a in ast.walk(t):
+                        if (
+                            isinstance(a, ast.Attribute)
+                            and isinstance(a.value, ast.Name)
+                            and a.value.id == "self"
+                        ):
+                            return True
+        return False
+
+    def _opens_obs_hook(
+        self, node: ast.FunctionDef | ast.AsyncFunctionDef
+    ) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.With, ast.AsyncWith)):
+                for item in sub.items:
+                    ce = item.context_expr
+                    if isinstance(ce, ast.Call) and _dotted(
+                        ce.func
+                    ).rsplit(".", 1)[-1] == "span":
+                        return True
+            elif isinstance(sub, ast.Call):
+                if _dotted(sub.func).rsplit(".", 1)[-1] in _OBS_RECORDERS:
+                    return True
+        return False
 
     def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
         self._visit_function(node)

@@ -3,11 +3,12 @@
 One `Finding` per rule violation (or informational note), one record per
 verified artifact — a (code, failed-node) repair plan, a code-level
 structural check, a lowered artifact (SPMD schedule, sharding-rule
-table, Pallas kernel geometry), or a linted source file — and one
-`CheckReport` aggregating a whole run.  The JSON schema (version 2;
-version 1 lacked ``lowered_records``) is stable and documented in
-docs/architecture.md; CI uploads it as an artifact so a failed gate can
-be diagnosed without re-running the sweep.
+table, Pallas kernel geometry), a traced program (jaxpr + HLO of a real
+entry point), or a linted source file — and one `CheckReport`
+aggregating a whole run.  The JSON schema (version 3; version 1 lacked
+``lowered_records``, version 2 lacked ``traced_records``) is stable and
+documented in docs/architecture.md; CI uploads it as an artifact so a
+failed gate can be diagnosed without re-running the sweep.
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ FAIL = "FAIL"
 
 _SEVERITY_ORDER = {PASS: 0, WARN: 1, FAIL: 2}
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -124,6 +125,42 @@ class LoweredRecord:
 
 
 @dataclass
+class TracedRecord:
+    """Verification outcome for one *traced* program.
+
+    The lowered layer analyzes declared artifacts; a traced record
+    covers the program XLA actually runs — the jaxpr (plus StableHLO /
+    compiled HLO where lowered) of one real entry point, analyzed by
+    the ``repro.check.traced`` dataflow rules.  ``kind`` is the program
+    class (``repair``, ``kernel``, ``hot-path``, ``checkpoint``);
+    ``label`` names the capture, e.g. ``spmd_repair[DRC(6,4,3)
+    failed=0]``.
+    """
+
+    label: str
+    kind: str
+    findings: list[Finding] = field(default_factory=list)
+    info: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def status(self) -> str:
+        worst = PASS
+        for f in self.findings:
+            if _SEVERITY_ORDER[f.severity] > _SEVERITY_ORDER[worst]:
+                worst = f.severity
+        return worst
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "label": self.label,
+            "kind": self.kind,
+            "status": self.status,
+            "findings": [f.as_dict() for f in self.findings],
+            "info": _jsonable(self.info),
+        }
+
+
+@dataclass
 class LintRecord:
     """AST-lint outcome for one source file."""
 
@@ -152,10 +189,18 @@ class CheckReport:
 
     plan_records: list[PlanRecord] = field(default_factory=list)
     lowered_records: list[LoweredRecord] = field(default_factory=list)
+    traced_records: list[TracedRecord] = field(default_factory=list)
     lint_records: list[LintRecord] = field(default_factory=list)
 
-    def _all_records(self) -> tuple[PlanRecord | LoweredRecord | LintRecord, ...]:
-        return (*self.plan_records, *self.lowered_records, *self.lint_records)
+    def _all_records(
+        self,
+    ) -> tuple[PlanRecord | LoweredRecord | TracedRecord | LintRecord, ...]:
+        return (
+            *self.plan_records,
+            *self.lowered_records,
+            *self.traced_records,
+            *self.lint_records,
+        )
 
     # ------------------------------------------------------------ queries
     def counts(self) -> dict[str, int]:
@@ -185,6 +230,7 @@ class CheckReport:
             "summary": self.counts(),
             "plan_records": [r.as_dict() for r in self.plan_records],
             "lowered_records": [r.as_dict() for r in self.lowered_records],
+            "traced_records": [r.as_dict() for r in self.traced_records],
             "lint_records": [r.as_dict() for r in self.lint_records],
         }
 

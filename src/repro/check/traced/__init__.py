@@ -1,0 +1,190 @@
+"""Static analysis over *traced* programs (``repro.check.traced``).
+
+Third verification layer.  ``repro.check.plan`` proves the repair DAG
+optimal, ``repro.check.lowered`` proves the declared lowering artifacts
+preserve that optimality; this package proves the **programs XLA
+actually runs** do too — it captures the real entry points
+(:mod:`.capture`: the ``spmd_repair`` shard_map program for every
+REGISTRY_SWEEP DRC shape + an RS contrast, both GF matmul kernels, the
+serve prefill/decode steps, the train step, the donated checkpoint
+encode) and runs dataflow rules over their jaxprs and StableHLO/HLO:
+
+* :mod:`.dtype_flow` — uint8 taint lattice: GF(2^8) payload bytes are
+  never wrapped by ring arithmetic, never promoted to float, and leave
+  the program as uint8.
+* :mod:`.collectives` — every traced ``ppermute`` matches one declared
+  ``SpmdRepairSpec`` schedule step (pairing-valid, deadlock-free, right
+  axis), and cross-rack bytes re-derived from the *compiled HLO* equal
+  ``plan.traffic_blocks()`` and the Eq. (3) closed form.
+* :mod:`.hygiene` — no host callback/infeed/outfeed in any hot-path
+  jaxpr; buffer donation survives into StableHLO + input_output_alias.
+
+Every rule has a paired mutation in ``TRACED_MUTATIONS``;
+:func:`self_test_traced` corrupts one captured artifact per mutation
+and demands the corruption FAIL *exactly* its owning rule (same
+contract as ``self_test_lowered``).  Mesh-shaped captures need
+``MAX_DEVICES`` XLA host devices — ``tools/run_check.py`` forces the
+platform device count before jax initializes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from ..report import FAIL, CheckReport, Finding, TracedRecord
+from . import collectives, dtype_flow, hygiene
+from .base import (
+    COLL_FAMILY,
+    DTYPE_FAMILY,
+    HYG_FAMILY,
+    TRACED_FAMILIES,
+    TRACED_RULES,
+    fail_rules,
+    rules_for,
+)
+from .capture import (
+    CollectiveFootprint,
+    TracedProgram,
+    capture_checkpoint_encode,
+    capture_gf_pallas,
+    capture_gf_ref,
+    capture_serve_decode,
+    capture_serve_prefill,
+    capture_spmd_repair,
+    capture_train_step,
+    iter_eqns,
+    require_devices,
+)
+
+
+def spmd_shapes() -> list[tuple[str, int, int, int]]:
+    """Every REGISTRY_SWEEP DRC shape, plus RS(9,6,3) as the
+    non-layered contrast — the shapes whose compiled HLO byte
+    accounting the gate demands."""
+    from ..plan import REGISTRY_SWEEP
+
+    shapes: list[tuple[str, int, int, int]] = []
+    for family in ("DRC-f1", "DRC-f2"):
+        for cfg in REGISTRY_SWEEP[family]:
+            if cfg not in shapes:
+                shapes.append(cfg)
+    shapes.append(("RS", 9, 6, 3))
+    return shapes
+
+
+# devices the largest mesh-shaped capture needs: r*w == n, max n == 15
+MAX_DEVICES = 16
+
+
+def run_rules(program: TracedProgram) -> list[Finding]:
+    """Run every registered traced rule over one captured program."""
+    findings: list[Finding] = []
+    for rid in sorted(TRACED_RULES):
+        _, fn = TRACED_RULES[rid]
+        findings.extend(fn(program))
+    return findings
+
+
+def _record(program: TracedProgram) -> TracedRecord:
+    info: dict[str, Any] = {
+        "eqns": sum(1 for _ in iter_eqns(program.jaxpr)),
+        "permutes": len(program.footprint.permutes),
+        "gathers": len(program.footprint.gathers),
+        "lowered": bool(program.stablehlo),
+        "rules_checked": len(TRACED_RULES),
+    }
+    spec = program.meta.get("spec")
+    if spec is not None:
+        info["cross_units"] = spec.cross_units
+        from repro.launch.hlo_analysis import cross_pod_permute_bytes
+
+        info["hlo_cross_bytes"] = cross_pod_permute_bytes(
+            program.hlo, int(program.meta["w"])
+        )
+    return TracedRecord(
+        label=program.name,
+        kind=program.kind,
+        findings=run_rules(program),
+        info=info,
+    )
+
+
+def run_traced_sweep() -> list[TracedRecord]:
+    """Capture + analyze every traced entry point; one record each."""
+    records: list[TracedRecord] = []
+    for fam, n, k, r in spmd_shapes():
+        records.append(_record(capture_spmd_repair(fam, n, k, r)))
+    records.append(_record(capture_gf_ref()))
+    records.append(_record(capture_gf_pallas()))
+    records.append(_record(capture_serve_prefill()))
+    records.append(_record(capture_serve_decode()))
+    records.append(_record(capture_train_step()))
+    records.append(_record(capture_checkpoint_encode()))
+    return records
+
+
+def traced_report() -> CheckReport:
+    """A CheckReport holding only the traced sweep."""
+    return CheckReport(traced_records=run_traced_sweep())
+
+
+# --------------------------------------------------------------- self-test
+# mutation name -> (family, owning rule id)
+TRACED_MUTATIONS: dict[str, tuple[str, str]] = {
+    **{m: (DTYPE_FAMILY, r) for m, r in dtype_flow.DTYPE_MUTATIONS.items()},
+    **{m: (COLL_FAMILY, r) for m, r in collectives.COLL_MUTATIONS.items()},
+    **{m: (HYG_FAMILY, r) for m, r in hygiene.HYG_MUTATIONS.items()},
+}
+
+_BASE_SHAPE = ("DRC", 6, 4, 3)
+_base_cache: list[TracedProgram] = []
+
+
+def _base_repair_program() -> TracedProgram:
+    """One captured known-good repair artifact, shared by the artifact
+    mutations (needs n=6 host devices)."""
+    if not _base_cache:
+        _base_cache.append(capture_spmd_repair(*_BASE_SHAPE))
+    return _base_cache[0]
+
+
+def mutant_program(mutation: str) -> TracedProgram:
+    """The corrupted program for one named mutation."""
+    if mutation in dtype_flow.DTYPE_MUTATIONS:
+        return dtype_flow.dtype_mutation_program(mutation)
+    if mutation in collectives.COLL_MUTATIONS:
+        return collectives.coll_mutation_program(
+            mutation, _base_repair_program()
+        )
+    if mutation == "hyg_callback":
+        return hygiene.callback_mutation_program()
+    if mutation == "hyg_no_donation":
+        return hygiene.donation_mutation_program(_base_repair_program())
+    raise ValueError(f"unknown traced mutation {mutation!r}")
+
+
+def self_test_traced() -> list[tuple[str, str, bool, bool]]:
+    """Corrupt one captured artifact per mutation.
+
+    Returns (mutation, owning rule, caught, exclusive) rows; the gate
+    demands caught AND exclusive — every registered traced rule runs
+    over the corrupted program and the corruption must FAIL exactly the
+    rule that owns it.
+    """
+    rows: list[tuple[str, str, bool, bool]] = []
+    for mutation, (_family, owner) in TRACED_MUTATIONS.items():
+        fails = fail_rules(run_rules(mutant_program(mutation)))
+        rows.append((mutation, owner, owner in fails, fails == {owner}))
+    return rows
+
+
+__all__ = [
+    "COLL_FAMILY", "DTYPE_FAMILY", "HYG_FAMILY", "MAX_DEVICES",
+    "TRACED_FAMILIES", "TRACED_MUTATIONS", "TRACED_RULES",
+    "CollectiveFootprint", "TracedProgram", "TracedRecord",
+    "capture_checkpoint_encode", "capture_gf_pallas", "capture_gf_ref",
+    "capture_serve_decode", "capture_serve_prefill",
+    "capture_spmd_repair", "capture_train_step", "collectives",
+    "dtype_flow", "fail_rules", "hygiene", "iter_eqns", "mutant_program",
+    "require_devices", "rules_for", "run_rules", "run_traced_sweep",
+    "self_test_traced", "spmd_shapes", "traced_report", "FAIL", "Finding",
+]

@@ -1,0 +1,73 @@
+"""Rule registry for the traced-layer analyzers.
+
+Third verification layer: ``repro.check.plan`` proves the repair DAG,
+``repro.check.lowered`` proves the static lowering artifacts, and this
+package proves the *programs XLA actually runs* — jaxprs captured from
+the real entry points plus their StableHLO/HLO text.
+
+Unlike the lowered registry (where a family identifies an artifact
+type), traced rules are grouped by *analysis* because every rule can in
+principle run over any captured program:
+
+* ``dtype-flow`` — the uint8 taint lattice over the jaxpr
+  (:mod:`.dtype_flow`),
+* ``collective`` — ppermute/all_gather conformance against the
+  ``SpmdRepairSpec`` schedule plus HLO byte accounting
+  (:mod:`.collectives`),
+* ``hygiene`` — host-transfer freedom and donation/aliasing
+  (:mod:`.hygiene`).
+
+``rule(rule_id, family)`` registers under a stable id; the sweep, the
+mutation self-test and the docs catalog all read ``TRACED_RULES``.
+Ids are namespaced ``traced.<group>.<name>``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, TypeVar
+
+from ..report import Finding
+
+TracedRuleFn = Callable[..., list[Finding]]
+_F = TypeVar("_F", bound=TracedRuleFn)
+
+DTYPE_FAMILY = "dtype-flow"
+COLL_FAMILY = "collective"
+HYG_FAMILY = "hygiene"
+
+TRACED_FAMILIES = (DTYPE_FAMILY, COLL_FAMILY, HYG_FAMILY)
+
+# rule id -> (family, rule fn); populated by the analysis modules at import
+TRACED_RULES: dict[str, tuple[str, TracedRuleFn]] = {}
+
+
+def rule(rule_id: str, family: str) -> Callable[[_F], _F]:
+    """Register a traced-layer rule under a stable id."""
+    if family not in TRACED_FAMILIES:
+        raise ValueError(f"unknown traced family {family!r}")
+
+    def deco(fn: _F) -> _F:
+        if rule_id in TRACED_RULES:
+            raise ValueError(f"duplicate traced rule id {rule_id!r}")
+        TRACED_RULES[rule_id] = (family, fn)
+        return fn
+
+    return deco
+
+
+def rules_for(family: str) -> dict[str, TracedRuleFn]:
+    """The registered rules of one analysis group, id -> fn."""
+    return {
+        rid: fn for rid, (fam, fn) in TRACED_RULES.items() if fam == family
+    }
+
+
+def fail_rules(findings: list[Finding]) -> set[str]:
+    """Distinct rule ids that FAILed — the mutation self-test's currency."""
+    from ..report import FAIL
+
+    return {f.rule for f in findings if f.severity == FAIL}
+
+
+def as_witness(**kw: Any) -> dict[str, Any]:
+    """Tiny helper keeping witness construction one line at call sites."""
+    return kw

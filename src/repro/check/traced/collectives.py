@@ -1,0 +1,339 @@
+"""Collective conformance: traced ppermutes vs the declared schedule.
+
+The lowered layer (``check/lowered/spmd.py``) proves properties of the
+*declared* ``SpmdRepairSpec``; these rules prove the *traced program*
+implements exactly that declaration and nothing else:
+
+* ``traced.coll.pairing`` — every ``ppermute`` in the jaxpr is
+  well-formed on the pod axis: pairs in ``[0, r)``, no self-send, and
+  source/destination pods each used at most once per equation
+  (duplicate sources or destinations deadlock or drop data under
+  XLA's permute semantics).
+* ``traced.coll.permute-match`` — the traced permutes and the spec's
+  ``permute_steps()`` match 1:1 (same (src, dst) pod pair, same row
+  count): no orphan send the plan never scheduled, no scheduled step
+  the program dropped.
+* ``traced.coll.axis-scope`` — DoubleR's layering discipline as a mesh
+  property: ``ppermute`` only ever crosses the ``pod`` (rack) axis and
+  ``all_gather``/``psum`` only aggregate over the ``node`` (intra-rack)
+  axis, so no collective smuggles bytes across the wrong boundary.
+* ``traced.coll.cross-bytes`` — re-derive cross-rack bytes from the
+  *compiled HLO* (``launch.hlo_analysis.parse_permutes``, pod = device
+  // w) and gate them against ``plan.traffic_blocks()`` and, for DRC,
+  the Eq. (3) closed form — the paper's bound as a property of the
+  binary XLA will run.
+
+The matcher (:func:`validate_pairs`, :func:`match_permutes`) is pure
+data → data so hypothesis can drive it over random (n, k, r, w) shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from ..report import FAIL, Finding
+from .base import COLL_FAMILY, as_witness, rule
+from .capture import (
+    REPAIR,
+    CollectiveFootprint,
+    GatherOp,
+    PermuteOp,
+    TracedProgram,
+)
+
+R_TC_PAIRING = "traced.coll.pairing"
+R_TC_MATCH = "traced.coll.permute-match"
+R_TC_AXIS = "traced.coll.axis-scope"
+R_TC_BYTES = "traced.coll.cross-bytes"
+
+Step = tuple[int, int, tuple[int, ...]]  # (src_pod, dst_pod, pool rows)
+
+
+# ------------------------------------------------------------ pure matcher
+def validate_pairs(
+    pairs: tuple[tuple[int, int], ...], r: int
+) -> list[str]:
+    """Well-formedness defects of one permute's (src, dst) pod pairs."""
+    defects: list[str] = []
+    if not pairs:
+        defects.append("empty pairing: permute moves no data")
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    for s, d in pairs:
+        if not (0 <= s < r and 0 <= d < r):
+            defects.append(f"pair ({s}, {d}) outside pod range [0, {r})")
+        elif s == d:
+            defects.append(f"self-send ({s}, {d}): bytes cross no rack")
+    if len(set(srcs)) != len(srcs):
+        defects.append(f"duplicate source pods {sorted(srcs)}")
+    if len(set(dsts)) != len(dsts):
+        defects.append(f"duplicate destination pods {sorted(dsts)}")
+    return defects
+
+
+@dataclasses.dataclass(frozen=True)
+class PermuteMatch:
+    """1:1 matching between traced permutes and declared steps."""
+
+    matched: tuple[tuple[int, int], ...]  # (permute index, step index)
+    orphan_permutes: tuple[int, ...]  # traced but never declared
+    orphan_steps: tuple[int, ...]  # declared but never traced
+
+    @property
+    def complete(self) -> bool:
+        return not self.orphan_permutes and not self.orphan_steps
+
+
+def match_permutes(
+    permutes: tuple[PermuteOp, ...], steps: tuple[Step, ...]
+) -> PermuteMatch:
+    """Match each traced permute to the declared step it implements.
+
+    A permute implements step ``(src, dst, rows)`` when its (single)
+    pair is exactly ``(src, dst)`` and its operand ships ``len(rows)``
+    pool rows.  Each step is consumed at most once, so a duplicated
+    permute becomes an orphan rather than double-matching.
+    """
+    free = dict(enumerate(steps))
+    matched: list[tuple[int, int]] = []
+    orphans: list[int] = []
+    for pi, p in enumerate(permutes):
+        hit = None
+        for si, (src, dst, rows) in free.items():
+            if p.pairs == ((src, dst),) and p.rows == len(rows):
+                hit = si
+                break
+        if hit is None:
+            orphans.append(pi)
+        else:
+            del free[hit]
+            matched.append((pi, hit))
+    return PermuteMatch(
+        matched=tuple(matched),
+        orphan_permutes=tuple(orphans),
+        orphan_steps=tuple(sorted(free)),
+    )
+
+
+def _repair_meta(program: TracedProgram) -> Any | None:
+    if program.kind != REPAIR:
+        return None
+    return program.meta.get("spec")
+
+
+# ------------------------------------------------------------------- rules
+@rule(R_TC_PAIRING, COLL_FAMILY)
+def check_pairing(program: TracedProgram) -> list[Finding]:
+    """Every traced ppermute is deadlock-free and self-send-free."""
+    spec = _repair_meta(program)
+    if spec is None:
+        return []
+    out: list[Finding] = []
+    for i, p in enumerate(program.footprint.permutes):
+        for defect in validate_pairs(p.pairs, spec.r):
+            out.append(Finding(
+                R_TC_PAIRING, FAIL,
+                f"{program.name}: permute #{i} malformed — {defect}",
+                as_witness(program=program.name, permute=i,
+                           pairs=[list(pr) for pr in p.pairs], r=spec.r),
+            ))
+    return out
+
+
+@rule(R_TC_MATCH, COLL_FAMILY)
+def check_permute_match(program: TracedProgram) -> list[Finding]:
+    """Traced permutes and declared schedule steps match 1:1."""
+    spec = _repair_meta(program)
+    if spec is None:
+        return []
+    permutes = program.footprint.permutes
+    if any(validate_pairs(p.pairs, spec.r) for p in permutes):
+        return []  # malformed pairing: traced.coll.pairing owns that
+    steps = spec.permute_steps()
+    m = match_permutes(permutes, steps)
+    out: list[Finding] = []
+    for pi in m.orphan_permutes:
+        p = permutes[pi]
+        out.append(Finding(
+            R_TC_MATCH, FAIL,
+            f"{program.name}: traced permute #{pi} "
+            f"(pairs={list(p.pairs)}, rows={p.rows}) implements no "
+            f"declared schedule step — bytes move that the plan never "
+            f"scheduled",
+            as_witness(program=program.name, permute=pi,
+                       pairs=[list(pr) for pr in p.pairs], rows=p.rows),
+        ))
+    for si in m.orphan_steps:
+        src, dst, rows = steps[si]
+        out.append(Finding(
+            R_TC_MATCH, FAIL,
+            f"{program.name}: declared step #{si} (pod {src} -> {dst}, "
+            f"{len(rows)} row(s)) has no traced permute — a scheduled "
+            f"cross-rack ship was dropped",
+            as_witness(program=program.name, step=si, src=src, dst=dst,
+                       rows=len(rows)),
+        ))
+    return out
+
+
+@rule(R_TC_AXIS, COLL_FAMILY)
+def check_axis_scope(program: TracedProgram) -> list[Finding]:
+    """ppermute crosses only `pod`; gathers/reductions stay on `node`."""
+    spec = _repair_meta(program)
+    if spec is None:
+        return []
+    out: list[Finding] = []
+    for i, p in enumerate(program.footprint.permutes):
+        if p.axes != ("pod",):
+            out.append(Finding(
+                R_TC_AXIS, FAIL,
+                f"{program.name}: permute #{i} runs over axes {p.axes}, "
+                f"not ('pod',) — cross-rack ships must use the rack axis",
+                as_witness(program=program.name, permute=i,
+                           axes=list(p.axes)),
+            ))
+    for i, g in enumerate(program.footprint.gathers):
+        if g.axes != ("node",):
+            out.append(Finding(
+                R_TC_AXIS, FAIL,
+                f"{program.name}: all_gather #{i} runs over axes "
+                f"{g.axes}, not ('node',) — intra-rack aggregation must "
+                f"never cross a pod boundary",
+                as_witness(program=program.name, gather=i,
+                           axes=list(g.axes)),
+            ))
+    for i, rd in enumerate(program.footprint.reduces):
+        if not set(rd.axes) <= {"node"}:
+            out.append(Finding(
+                R_TC_AXIS, FAIL,
+                f"{program.name}: {rd.name} #{i} reduces over axes "
+                f"{rd.axes} — only the 'node' axis may aggregate",
+                as_witness(program=program.name, reduce=i,
+                           axes=list(rd.axes), op=rd.name),
+            ))
+    return out
+
+
+@rule(R_TC_BYTES, COLL_FAMILY)
+def check_cross_bytes(program: TracedProgram) -> list[Finding]:
+    """Compiled-HLO cross-pod permute bytes == plan bytes == Eq. (3)."""
+    spec = _repair_meta(program)
+    if spec is None or not program.hlo:
+        return []
+    from repro.launch.hlo_analysis import cross_pod_permute_bytes
+
+    plan = program.meta["plan"]
+    code = program.meta["code"]
+    sub = int(program.meta["sub_bytes"])
+    w = int(program.meta["w"])
+    hlo_bytes = cross_pod_permute_bytes(program.hlo, w)
+    blocks = float(plan.traffic_blocks()["cross_rack_blocks"])
+    plan_bytes = round(blocks * plan.alpha) * sub
+    out: list[Finding] = []
+    if hlo_bytes != plan_bytes:
+        out.append(Finding(
+            R_TC_BYTES, FAIL,
+            f"{program.name}: compiled HLO ships {hlo_bytes} cross-pod "
+            f"byte(s) but the plan accounts {plan_bytes} "
+            f"({blocks:g} blocks x alpha={plan.alpha} x sub={sub})",
+            as_witness(program=program.name, hlo_bytes=hlo_bytes,
+                       plan_bytes=plan_bytes, blocks=blocks, sub=sub),
+        ))
+        return out
+    try:
+        bound = float(code.theoretical_cross_rack_blocks())
+    except NotImplementedError:
+        bound = None
+    if bound is not None:
+        bound_bytes = round(bound * plan.alpha) * sub
+        if hlo_bytes != bound_bytes:
+            out.append(Finding(
+                R_TC_BYTES, FAIL,
+                f"{program.name}: compiled HLO ships {hlo_bytes} "
+                f"cross-pod byte(s); the Eq. (3) closed form gives "
+                f"{bound_bytes} ({bound:g} blocks x alpha={plan.alpha} "
+                f"x sub={sub})",
+                as_witness(program=program.name, hlo_bytes=hlo_bytes,
+                           bound_bytes=bound_bytes, bound_blocks=bound),
+            ))
+    return out
+
+
+# --------------------------------------------------------------- mutations
+# mutation name -> owning rule id; each corrupts the captured artifact of
+# one real spmd_repair program (footprint or HLO text, whichever the
+# owning rule actually reads) and must FAIL exactly its owner.
+COLL_MUTATIONS: dict[str, str] = {
+    "coll_orphan_permute": R_TC_MATCH,
+    "coll_self_send": R_TC_PAIRING,
+    "coll_axis_scope": R_TC_AXIS,
+    "coll_hlo_bytes": R_TC_BYTES,
+}
+
+
+def coll_mutation_program(
+    mutation: str, base: TracedProgram
+) -> TracedProgram:
+    """Apply one named corruption to a captured repair program."""
+    fp = base.footprint
+    if mutation == "coll_orphan_permute":
+        # drop a scheduled ship: the declared step becomes an orphan
+        if not fp.permutes:
+            raise ValueError("base program traces no permutes")
+        new_fp = dataclasses.replace(fp, permutes=fp.permutes[1:])
+        return dataclasses.replace(base, footprint=new_fp)
+    if mutation == "coll_self_send":
+        # first permute sends a pod's bytes to itself
+        if not fp.permutes:
+            raise ValueError("base program traces no permutes")
+        p = fp.permutes[0]
+        q = p.pairs[0][0]
+        bad = dataclasses.replace(p, pairs=((q, q),))
+        new_fp = dataclasses.replace(fp, permutes=(bad, *fp.permutes[1:]))
+        return dataclasses.replace(base, footprint=new_fp)
+    if mutation == "coll_axis_scope":
+        # an all_gather quietly aggregates over the rack axis
+        spec = base.meta["spec"]
+        bad_gather = GatherOp(axes=("pod",), axis_size=spec.r)
+        new_fp = dataclasses.replace(
+            fp, gathers=(*fp.gathers, bad_gather)
+        )
+        return dataclasses.replace(base, footprint=new_fp)
+    if mutation == "coll_hlo_bytes":
+        # the compiled module ships one cross-pod permute twice
+        lines = base.hlo.splitlines()
+        for i, line in enumerate(lines):
+            if ("collective-permute" in line and "=" in line
+                    and "source_target_pairs=" in line
+                    and "collective-permute-done(" not in line):
+                dup = lines[:i + 1] + [line] + lines[i + 1:]
+                return dataclasses.replace(base, hlo="\n".join(dup))
+        raise ValueError("base HLO contains no collective-permute")
+    raise ValueError(f"unknown collective mutation {mutation!r}")
+
+
+def coll_mutation_findings(
+    mutation: str, base: TracedProgram
+) -> list[Finding]:
+    program = coll_mutation_program(mutation, base)
+    findings: list[Finding] = []
+    findings.extend(check_pairing(program))
+    findings.extend(check_permute_match(program))
+    findings.extend(check_axis_scope(program))
+    findings.extend(check_cross_bytes(program))
+    return findings
+
+
+__all__ = [
+    "COLL_MUTATIONS",
+    "CollectiveFootprint",
+    "PermuteMatch",
+    "check_axis_scope",
+    "check_cross_bytes",
+    "check_pairing",
+    "check_permute_match",
+    "coll_mutation_findings",
+    "coll_mutation_program",
+    "match_permutes",
+    "validate_pairs",
+]

@@ -1,0 +1,140 @@
+"""Hot-path hygiene: host-transfer freedom and buffer donation.
+
+* ``traced.hyg.host-transfer`` — the repair, serve, train and
+  checkpoint programs must be pure device programs: any callback /
+  infeed / outfeed primitive in the jaxpr stalls the hot path on a
+  host round-trip (ROADMAP: "run as fast as the hardware allows").
+  The AST linter catches *syntactic* host calls; this rule catches
+  whatever actually survived into the traced program, through every
+  function boundary.
+* ``traced.hyg.donation`` — programs whose caller donates buffers
+  (spmd repair payloads, checkpoint encode) must carry the donation
+  through lowering: the StableHLO must mark the donated argument
+  (``jax.buffer_donor`` / ``tf.aliasing_output``) and the compiled
+  module must report an ``input_output_alias`` — otherwise
+  encode/repair double-allocates the payload, which at checkpoint
+  sizes is the difference between in-place and OOM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from ..report import FAIL, Finding
+from .base import HYG_FAMILY, as_witness, rule
+from .capture import HOT_PATH, TracedProgram, _capture, iter_eqns
+
+R_TH_HOST = "traced.hyg.host-transfer"
+R_TH_DONATE = "traced.hyg.donation"
+
+# Primitives that force a host round-trip mid-program.
+HOST_TRANSFER_PRIMS = frozenset({
+    "pure_callback",
+    "io_callback",
+    "callback",
+    "python_callback",
+    "debug_callback",
+    "debug_print",
+    "infeed",
+    "outfeed",
+})
+
+_DONOR_MARKS = ("jax.buffer_donor", "tf.aliasing_output")
+
+
+@rule(R_TH_HOST, HYG_FAMILY)
+def check_host_transfer(program: TracedProgram) -> list[Finding]:
+    """No callback/infeed/outfeed primitive anywhere in the jaxpr."""
+    hits: dict[str, int] = {}
+    for eqn in iter_eqns(program.jaxpr):
+        name = eqn.primitive.name
+        if name in HOST_TRANSFER_PRIMS:
+            hits[name] = hits.get(name, 0) + 1
+    return [
+        Finding(
+            R_TH_HOST, FAIL,
+            f"{program.name}: jaxpr contains {count} `{prim}` "
+            f"equation(s) — the hot path must never round-trip through "
+            f"the host",
+            as_witness(program=program.name, primitive=prim, count=count),
+        )
+        for prim, count in sorted(hits.items())
+    ]
+
+
+@rule(R_TH_DONATE, HYG_FAMILY)
+def check_donation(program: TracedProgram) -> list[Finding]:
+    """Donated buffers stay donated through StableHLO and compile."""
+    if not program.donated or not program.stablehlo:
+        return []
+    out: list[Finding] = []
+    if not any(mark in program.stablehlo for mark in _DONOR_MARKS):
+        out.append(Finding(
+            R_TH_DONATE, FAIL,
+            f"{program.name}: argument(s) {list(program.donated)} are "
+            f"donated but the StableHLO carries no donation marker "
+            f"({' / '.join(_DONOR_MARKS)}) — the donation was lost in "
+            f"lowering",
+            as_witness(program=program.name,
+                       donated=list(program.donated)),
+        ))
+    if program.hlo and "input_output_alias" not in program.hlo:
+        out.append(Finding(
+            R_TH_DONATE, FAIL,
+            f"{program.name}: compiled module reports no "
+            f"input_output_alias for donated argument(s) "
+            f"{list(program.donated)} — encode/repair will "
+            f"double-allocate the payload buffer",
+            as_witness(program=program.name,
+                       donated=list(program.donated)),
+        ))
+    return out
+
+
+# --------------------------------------------------------------- mutations
+HYG_MUTATIONS: dict[str, str] = {
+    "hyg_callback": R_TH_HOST,
+    "hyg_no_donation": R_TH_DONATE,
+}
+
+
+def callback_mutation_program() -> TracedProgram:
+    """A hot-path program that sneaks a host callback into the step."""
+    import jax
+    import jax.numpy as jnp
+
+    def bad(x: Any) -> Any:
+        # e.g. a "quick" metrics hook left in the step function
+        y = jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct((), jnp.float32), x
+        )
+        return y + 1.0
+
+    x = jax.ShapeDtypeStruct((), jnp.float32)
+    return _capture("mutant[hyg_callback]", HOT_PATH, bad, (x,))
+
+
+def donation_mutation_program(base: TracedProgram) -> TracedProgram:
+    """Strip the donation markers a captured donated program carries."""
+    if not base.donated:
+        raise ValueError("base program donates no arguments")
+    stablehlo = base.stablehlo
+    for mark in _DONOR_MARKS:
+        stablehlo = stablehlo.replace(mark, "x.removed_attr")
+    hlo = base.hlo.replace("input_output_alias", "removed_output_alias")
+    return dataclasses.replace(base, stablehlo=stablehlo, hlo=hlo)
+
+
+def hyg_mutation_findings(
+    mutation: str, base: TracedProgram
+) -> list[Finding]:
+    if mutation == "hyg_callback":
+        program = callback_mutation_program()
+    elif mutation == "hyg_no_donation":
+        program = donation_mutation_program(base)
+    else:
+        raise ValueError(f"unknown hygiene mutation {mutation!r}")
+    findings: list[Finding] = []
+    findings.extend(check_host_transfer(program))
+    findings.extend(check_donation(program))
+    return findings

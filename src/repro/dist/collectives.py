@@ -329,14 +329,16 @@ def _record_schedule(spec: SpmdRepairSpec, sub_bytes: int) -> None:
 
 
 def spmd_repair(
-    code: ErasureCode, failed: int, payloads: Any, mesh: Any
+    code: ErasureCode, failed: int, payloads: Any, mesh: Any,
+    *, donate: bool = False
 ) -> tuple[Any, SpmdRepairSpec]:
     """Repair one stripe as a single SPMD program.
 
     payloads: (n, alpha, sub) uint8, node-major (row i = node i's
     payload; the failed row is ignored).  Returns the (n, alpha, sub)
     output — row ``spec.target_pod * spec.w`` is the reconstruction —
-    plus the static spec.
+    plus the static spec.  With ``donate=True`` the payload buffer is
+    donated to XLA (in-place repair; the caller's array is invalidated).
     """
     import jax
     from jax.sharding import PartitionSpec as P
@@ -349,6 +351,7 @@ def spmd_repair(
         make_spmd_repair(spec), mesh=mesh,
         in_specs=P(("pod", "node")), out_specs=P(("pod", "node")),
     )
+    jit_fn = jax.jit(fn, donate_argnums=0 if donate else ())
     # the three stages execute fused inside one XLA program, so the
     # stage spans carry the static schedule (unit counts) and the
     # counters carry the bytes; wall time lives on the decode span,
@@ -362,7 +365,7 @@ def spmd_repair(
             pass
         with obs.span("repair.decode", cat="repair",
                       units=len(spec.target_idx)):
-            out = jax.jit(fn)(payloads)
+            out = jit_fn(payloads)
     return out, spec
 
 

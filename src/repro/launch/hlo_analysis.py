@@ -53,6 +53,56 @@ def _shape_bytes(text: str) -> int:
     return total
 
 
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{[0-9]+,[0-9]+\}(?:,\{[0-9]+,[0-9]+\})*)\}")
+_PAIR_RE = re.compile(r"\{([0-9]+),([0-9]+)\}")
+
+
+@dataclass(frozen=True)
+class PermuteInstr:
+    """One compiled ``collective-permute`` instruction: per-device result
+    bytes plus its ``source_target_pairs`` (flat *device* ids)."""
+
+    nbytes: int
+    pairs: tuple[tuple[int, int], ...]
+
+
+def parse_permutes(hlo_text: str) -> list[PermuteInstr]:
+    """Every collective-permute of a compiled module, with its device
+    pairing — the raw material for cross-pod byte accounting."""
+    out: list[PermuteInstr] = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        m = re.search(r"=\s+(.+?)\s+collective-permute(?:-start)?\(", line)
+        if m is None or "collective-permute-done(" in line:
+            continue
+        pm = _PAIRS_RE.search(line)
+        pairs: tuple[tuple[int, int], ...] = ()
+        if pm:
+            pairs = tuple(
+                (int(s), int(d)) for s, d in _PAIR_RE.findall(pm.group(1))
+            )
+        out.append(PermuteInstr(nbytes=_shape_bytes(m.group(1)), pairs=pairs))
+    return out
+
+
+def cross_pod_permute_bytes(hlo_text: str, w: int) -> int:
+    """Bytes the compiled module ships *across pods* via
+    collective-permute, with pod = device // w on a (pod, node) mesh.
+
+    Result shapes are per-device shards, so each instruction whose
+    pairing crosses a pod boundary contributes its result bytes once —
+    the same accounting that makes the sum comparable to
+    ``plan.traffic_blocks()["cross_rack_blocks"] * alpha * sub``.
+    """
+    total = 0
+    for instr in parse_permutes(hlo_text):
+        if any(s // w != d // w for s, d in instr.pairs):
+            total += instr.nbytes
+    return total
+
+
 @dataclass
 class CollectiveStats:
     bytes_by_op: dict[str, int] = field(default_factory=dict)

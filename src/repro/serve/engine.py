@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models import backbone
 from repro.models.config import ArchConfig
 from .serve_step import make_decode_step, sample_token
@@ -36,11 +37,14 @@ class ServeEngine:
             )
             return (state, logits.astype(jnp.float32)), None
 
-        dummy = jnp.zeros((b, self.cfg.padded_vocab), jnp.float32)
-        (self.state, logits), _ = jax.lax.scan(
-            body, (self.state, dummy), jnp.arange(s)
-        )
-        self.position += s
+        with obs.span("serve.prefill", cat="serve", arch=self.cfg.name,
+                      batch=b, tokens=int(s), position=self.position):
+            dummy = jnp.zeros((b, self.cfg.padded_vocab), jnp.float32)
+            (self.state, logits), _ = jax.lax.scan(
+                body, (self.state, dummy), jnp.arange(s)
+            )
+            self.position += s
+            obs.counter_add("serve.tokens.prefill", b * int(s))
         return logits
 
     def generate(self, n_tokens: int, key=None, temperature: float = 0.0):
@@ -53,13 +57,17 @@ class ServeEngine:
             if last is not None
             else jnp.zeros((self.batch,), jnp.int32)
         )
-        for i in range(n_tokens):
-            key, sub = jax.random.split(key)
-            logits, self.state = self._step(
-                self.params, self.state, tok[:, None], self.position
-            )
-            tok = sample_token(sub, logits, temperature)
-            out.append(tok)
-            self.position += 1
+        with obs.span("serve.generate", cat="serve", arch=self.cfg.name,
+                      batch=self.batch, tokens=n_tokens,
+                      temperature=temperature):
+            for i in range(n_tokens):
+                key, sub = jax.random.split(key)
+                logits, self.state = self._step(
+                    self.params, self.state, tok[:, None], self.position
+                )
+                tok = sample_token(sub, logits, temperature)
+                out.append(tok)
+                self.position += 1
+            obs.counter_add("serve.tokens.decode", self.batch * n_tokens)
         self._last_logits = logits
         return jnp.stack(out, axis=1)

@@ -15,7 +15,9 @@ On restore:
 * ≥ 2 missing, ≤ n-k    → MDS decode from any k survivors.
 
 Payloads carry CRC32s so silent corruption degrades to the repair path.
-The GF math runs through repro.kernels.ops.gf_matmul (Pallas on TPU).
+Encode runs as one jitted, input-donated XLA program (`make_encode_step`,
+built on the uint8-clean gf_matmul_jnp path) that the traced
+verification layer captures and gates.
 """
 from __future__ import annotations
 
@@ -26,14 +28,17 @@ from dataclasses import dataclass, field
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.code_base import ErasureCode
 from repro.core.codes import make_code
+from repro.core.gf_jax import gf_matmul_jnp
 
 
 # ------------------------------------------------------------- serialization
-def state_to_bytes(state) -> tuple[bytes, list[dict]]:
+def state_to_bytes(state) -> tuple[bytes, list[dict]]:  # check: ignore[uninstrumented-entrypoint] pure converter
     leaves, _ = jax.tree.flatten(state)
     meta = []
     chunks = []
@@ -44,7 +49,7 @@ def state_to_bytes(state) -> tuple[bytes, list[dict]]:
     return b"".join(chunks), meta
 
 
-def bytes_to_state(buf: bytes, meta: list[dict], like) -> Any:
+def bytes_to_state(buf: bytes, meta: list[dict], like) -> Any:  # check: ignore[uninstrumented-entrypoint] pure converter
     _, treedef = jax.tree.flatten(like)
     leaves = []
     off = 0
@@ -72,25 +77,56 @@ class EncodedCheckpoint:
         return make_code(*self.code_spec)
 
 
+# One compiled systematic-encode program per (code, sub_bytes) shape.
+# The whole (n*alpha, sub) coded buffer is donated so XLA writes the
+# parity rows into the caller's storage instead of allocating a copy —
+# the traced verification layer (`repro.check.traced`) captures exactly
+# this program and gates on the donation surviving into StableHLO and
+# on the GF payload staying uint8 through the jaxpr.
+_ENCODE_STEPS: dict[tuple[str, int], Any] = {}
+
+
+def make_encode_step(code: ErasureCode, sub: int):
+    """Jitted ``coded -> coded`` systematic encode with a donated input.
+
+    ``coded`` is the full (n*alpha, sub) uint8 stripe; rows [:k*alpha]
+    hold data and the step overwrites the parity rows with
+    ``generator[k*alpha:] @ data`` in GF(2^8).  Uses the table-driven
+    ``gf_matmul_jnp`` path, whose jaxpr keeps payload bytes uint8
+    end-to-end (the log/exp reference oracle would not).
+    """
+    key = (repr(code), sub)
+    step = _ENCODE_STEPS.get(key)
+    if step is not None:
+        return step
+    ka = code.k * code.alpha
+    gen_parity = jnp.asarray(code.generator[ka:], dtype=jnp.uint8)
+
+    def encode(coded: jax.Array) -> jax.Array:
+        parity = gf_matmul_jnp(gen_parity, coded[:ka])
+        return jax.lax.dynamic_update_slice(coded, parity, (ka, 0))
+
+    step = jax.jit(encode, donate_argnums=0)
+    _ENCODE_STEPS[key] = step
+    return step
+
+
 def encode_state(
     state, *, family: str = "DRC", n: int = 9, k: int = 6, r: int = 3, step: int = 0
 ) -> EncodedCheckpoint:
     code = make_code(family, n, k, r)
-    buf, meta = state_to_bytes(state)
-    total = len(buf)
-    ka = code.k * code.alpha
-    sub = (total + ka - 1) // ka
-    sub = (sub + 127) // 128 * 128  # lane-aligned payloads for the kernel
-    padded = np.zeros(ka * sub, dtype=np.uint8)
-    padded[:total] = np.frombuffer(buf, dtype=np.uint8)
-    data = padded.reshape(ka, sub)
-    # systematic encode on the accelerated data path (Pallas on TPU)
-    from repro.kernels.ops import gf_matmul
-
-    parity = np.asarray(gf_matmul(code.generator[ka:], data))
-    coded = np.concatenate([data, parity], axis=0)
-    a = code.alpha
-    payloads = {i: coded[i * a : (i + 1) * a] for i in range(code.n)}
+    with obs.span("ckpt.encode", cat="checkpoint", family=family, n=n, k=k, r=r):
+        buf, meta = state_to_bytes(state)
+        total = len(buf)
+        ka = code.k * code.alpha
+        sub = (total + ka - 1) // ka
+        sub = (sub + 127) // 128 * 128  # lane-aligned payloads for the kernel
+        stripe = np.zeros((code.n * code.alpha, sub), dtype=np.uint8)
+        stripe[:ka].reshape(-1)[:total] = np.frombuffer(buf, dtype=np.uint8)
+        coded = np.asarray(make_encode_step(code, sub)(stripe))
+        a = code.alpha
+        payloads = {i: coded[i * a : (i + 1) * a] for i in range(code.n)}
+        obs.counter_add("ckpt.encoded_bytes", int(coded.nbytes), family=family)
     return EncodedCheckpoint(
         code_spec=(family, n, k, r),
         payloads=payloads,
@@ -116,47 +152,51 @@ def restore_state(
     if available is None:
         available = set(ckpt.payloads)
     missing = [i for i in range(code.n) if i not in available]
-    report = RestoreReport(mode="direct")
-    payloads = {i: p for i, p in ckpt.payloads.items() if i in available}
+    with obs.span("ckpt.restore", cat="checkpoint", step=ckpt.step,
+                  missing=len(missing)):
+        report = RestoreReport(mode="direct")
+        payloads = {i: p for i, p in ckpt.payloads.items() if i in available}
 
-    data_nodes = list(range(code.k))
-    missing_data = [i for i in data_nodes if i not in available]
-    if not missing_data:
-        data = np.concatenate([payloads[i] for i in data_nodes], axis=0)
-    elif len(missing) == 1:
-        # single-failure: the paper's layered repair (degraded read)
-        f = missing[0]
-        plan = code.repair_plan(f)
-        repaired = plan.execute(payloads)
-        t = plan.traffic_blocks()
-        report = RestoreReport(
-            mode="repair",
-            repaired_nodes=[f],
-            cross_rack_blocks=t["cross_rack_blocks"],
-            inner_rack_blocks=t["inner_rack_blocks"],
-        )
-        payloads = dict(payloads)
-        payloads[f] = repaired
-        data = np.concatenate([payloads[i] for i in data_nodes], axis=0)
-    else:
-        if len(available) < code.k:
-            raise ValueError(
-                f"unrecoverable: {len(missing)} failures > n-k = {code.n - code.k}"
+        data_nodes = list(range(code.k))
+        missing_data = [i for i in data_nodes if i not in available]
+        if not missing_data:
+            data = np.concatenate([payloads[i] for i in data_nodes], axis=0)
+        elif len(missing) == 1:
+            # single-failure: the paper's layered repair (degraded read)
+            f = missing[0]
+            plan = code.repair_plan(f)
+            repaired = plan.execute(payloads)
+            t = plan.traffic_blocks()
+            report = RestoreReport(
+                mode="repair",
+                repaired_nodes=[f],
+                cross_rack_blocks=t["cross_rack_blocks"],
+                inner_rack_blocks=t["inner_rack_blocks"],
             )
-        chosen = dict(list(sorted(payloads.items()))[: code.k])
-        data = code.decode(chosen)
-        report = RestoreReport(mode="decode", repaired_nodes=missing)
-    buf = data.reshape(-1).tobytes()[: ckpt.total_bytes]
-    return bytes_to_state(buf, ckpt.meta, like), report
+            payloads = dict(payloads)
+            payloads[f] = repaired
+            data = np.concatenate([payloads[i] for i in data_nodes], axis=0)
+        else:
+            if len(available) < code.k:
+                raise ValueError(
+                    f"unrecoverable: {len(missing)} failures > n-k = {code.n - code.k}"
+                )
+            chosen = dict(list(sorted(payloads.items()))[: code.k])
+            data = code.decode(chosen)
+            report = RestoreReport(mode="decode", repaired_nodes=missing)
+        obs.counter_add("ckpt.restores", 1, mode=report.mode)
+        buf = data.reshape(-1).tobytes()[: ckpt.total_bytes]
+        return bytes_to_state(buf, ckpt.meta, like), report
 
 
 def repair_node(ckpt: EncodedCheckpoint, failed: int) -> tuple[np.ndarray, dict]:
     """Node recovery of one payload; returns (payload, traffic stats)."""
     code = ckpt.code
-    plan = code.repair_plan(failed)
-    payloads = {i: p for i, p in ckpt.payloads.items() if i != failed}
-    repaired = plan.execute(payloads)
-    return repaired, plan.traffic_blocks()
+    with obs.span("ckpt.repair_node", cat="checkpoint", failed=failed):
+        plan = code.repair_plan(failed)
+        payloads = {i: p for i, p in ckpt.payloads.items() if i != failed}
+        repaired = plan.execute(payloads)
+        return repaired, plan.traffic_blocks()
 
 
 # ---------------------------------------------------------------------- disk
@@ -188,28 +228,29 @@ class CheckpointManager:
             r=self.spec[3],
             step=step,
         )
-        d = self._stepdir(step)
-        os.makedirs(d, exist_ok=True)
-        crcs = {}
-        for i, payload in ckpt.payloads.items():
-            raw = payload.tobytes()
-            crcs[str(i)] = zlib.crc32(raw)
-            with open(os.path.join(d, f"node_{i}.bin"), "wb") as f:
-                f.write(raw)
-        meta = {
-            "step": step,
-            "code": list(ckpt.code_spec),
-            "total_bytes": ckpt.total_bytes,
-            "payload_shape": list(next(iter(ckpt.payloads.values())).shape),
-            "crcs": crcs,
-            "leaves": ckpt.meta,
-        }
-        with open(os.path.join(d, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        self._gc()
+        with obs.span("ckpt.save", cat="checkpoint", step=step):
+            d = self._stepdir(step)
+            os.makedirs(d, exist_ok=True)
+            crcs = {}
+            for i, payload in ckpt.payloads.items():
+                raw = payload.tobytes()
+                crcs[str(i)] = zlib.crc32(raw)
+                with open(os.path.join(d, f"node_{i}.bin"), "wb") as f:
+                    f.write(raw)
+            meta = {
+                "step": step,
+                "code": list(ckpt.code_spec),
+                "total_bytes": ckpt.total_bytes,
+                "payload_shape": list(next(iter(ckpt.payloads.values())).shape),
+                "crcs": crcs,
+                "leaves": ckpt.meta,
+            }
+            with open(os.path.join(d, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            self._gc()
         return ckpt
 
-    def steps(self) -> list[int]:
+    def steps(self) -> list[int]:  # check: ignore[uninstrumented-entrypoint] directory scan
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and os.path.exists(
@@ -231,6 +272,10 @@ class CheckpointManager:
         if not steps:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         step = step if step is not None else steps[-1]
+        with obs.span("ckpt.load", cat="checkpoint", step=step):
+            return self._load_step(like, step)
+
+    def _load_step(self, like, step: int):
         d = self._stepdir(step)
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)

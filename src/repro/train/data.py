@@ -32,7 +32,7 @@ class SyntheticStream:
         self.cfg = cfg
         self.data = data
 
-    def batch_at(self, step: int) -> dict:
+    def batch_at(self, step: int) -> dict:  # check: ignore[uninstrumented-entrypoint] synthetic data
         rng = np.random.default_rng((self.data.seed << 20) ^ step)
         b, s = self.data.batch, self.data.seq
         v = self.cfg.vocab

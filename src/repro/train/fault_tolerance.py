@@ -18,22 +18,32 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 import numpy as np
 
+from repro import obs
+
 from .checkpoint import EncodedCheckpoint, encode_state, repair_node, restore_state
+
+# One injectable time source threaded through the whole control plane:
+# production uses the monotonic clock, tests pass a fake and every
+# timeout decision becomes deterministic.
+Clock = Callable[[], float]
 
 
 @dataclass
 class FailureDetector:
     timeout_s: float = 60.0
+    clock: Clock = time.monotonic
     last_beat: dict[int, float] = field(default_factory=dict)
 
     def heartbeat(self, node: int, now: float | None = None):
-        self.last_beat[node] = time.monotonic() if now is None else now
+        self.last_beat[node] = self.clock() if now is None else now
+        obs.counter_add("ft.heartbeats", 1, node=str(node))
 
     def failed_nodes(self, now: float | None = None) -> list[int]:
-        now = time.monotonic() if now is None else now
+        now = self.clock() if now is None else now
         return sorted(
             n for n, t in self.last_beat.items() if now - t > self.timeout_s
         )
@@ -50,13 +60,17 @@ class StragglerMonitor:
 
     threshold: float = 1.5
     window: int = 16
+    clock: Clock = time.monotonic
     times: dict[int, list[float]] = field(default_factory=dict)
+    last_seen: dict[int, float] = field(default_factory=dict)
 
-    def report(self, pod: int, step_time: float):
+    def report(self, pod: int, step_time: float, now: float | None = None):
+        self.last_seen[pod] = self.clock() if now is None else now
         self.times.setdefault(pod, []).append(step_time)
         self.times[pod] = self.times[pod][-self.window :]
+        obs.counter_add("ft.step_reports", 1, pod=str(pod))
 
-    def stragglers(self) -> list[int]:
+    def stragglers(self) -> list[int]:  # check: ignore[uninstrumented-entrypoint] pure query
         if len(self.times) < 2:
             return []
         med = {p: float(np.median(t)) for p, t in self.times.items()}
@@ -75,33 +89,38 @@ class RecoveryAction:
 
 
 class FaultToleranceManager:
-    def __init__(self, *, family="DRC", n=9, k=6, r=3):
+    def __init__(self, *, family="DRC", n=9, k=6, r=3, clock: Clock | None = None):
         self.spec = (family, n, k, r)
-        self.detector = FailureDetector()
-        self.straggler = StragglerMonitor()
+        self.clock = clock if clock is not None else time.monotonic
+        self.detector = FailureDetector(clock=self.clock)
+        self.straggler = StragglerMonitor(clock=self.clock)
 
     def plan_recovery(self, ckpt: EncodedCheckpoint, lost: list[int]) -> RecoveryAction:
-        n, k = ckpt.code_spec[1], ckpt.code_spec[2]
-        if not lost:
-            return RecoveryAction("noop")
-        if len(lost) == 1:
-            return RecoveryAction("repair", {"node": lost[0]})
-        if len(lost) <= n - k:
-            return RecoveryAction("decode", {"nodes": lost})
-        return RecoveryAction("rollback", {})
+        with obs.span("ft.plan_recovery", cat="ft", lost=len(lost)):
+            n, k = ckpt.code_spec[1], ckpt.code_spec[2]
+            if not lost:
+                return RecoveryAction("noop")
+            if len(lost) == 1:
+                return RecoveryAction("repair", {"node": lost[0]})
+            if len(lost) <= n - k:
+                return RecoveryAction("decode", {"nodes": lost})
+            return RecoveryAction("rollback", {})
 
     def execute(self, ckpt: EncodedCheckpoint, like, lost: list[int]):
         action = self.plan_recovery(ckpt, lost)
-        if action.kind == "noop":
-            state, report = restore_state(ckpt, like)
+        with obs.span("ft.execute", cat="ft", kind=action.kind,
+                      lost=len(lost)):
+            if action.kind == "noop":
+                state, report = restore_state(ckpt, like)
+                return state, report, action
+            if action.kind == "rollback":
+                raise RuntimeError(
+                    f"{len(lost)} failures exceed n-k; roll back to durable checkpoint"
+                )
+            available = set(ckpt.payloads) - set(lost)
+            state, report = restore_state(ckpt, like, available=available)
+            obs.counter_add("ft.recoveries", 1, kind=action.kind)
             return state, report, action
-        if action.kind == "rollback":
-            raise RuntimeError(
-                f"{len(lost)} failures exceed n-k; roll back to durable checkpoint"
-            )
-        available = set(ckpt.payloads) - set(lost)
-        state, report = restore_state(ckpt, like, available=available)
-        return state, report, action
 
     # ------------------------------------------------------------- elastic
     def rescale(
@@ -109,13 +128,15 @@ class FaultToleranceManager:
     ) -> EncodedCheckpoint:
         """Re-encode the stripe for a new cluster topology (elastic scale
         up/down): decode current state, encode with the new (n, k, r)."""
-        state, _ = restore_state(ckpt, like)
         fam, n0, k0, r0 = ckpt.code_spec
-        return encode_state(
-            state,
-            family=family or fam,
-            n=n or n0,
-            k=k or k0,
-            r=r or r0,
-            step=ckpt.step,
-        )
+        with obs.span("ft.rescale", cat="ft", old=f"({n0},{k0},{r0})",
+                      new=f"({n or n0},{k or k0},{r or r0})"):
+            state, _ = restore_state(ckpt, like)
+            return encode_state(
+                state,
+                family=family or fam,
+                n=n or n0,
+                k=k or k0,
+                r=r or r0,
+                step=ckpt.step,
+            )

@@ -6,6 +6,7 @@ additionally want hypothesis and are skipped without it.
 """
 import dataclasses
 import json
+import os
 
 import numpy as np
 import pytest
@@ -246,9 +247,10 @@ def test_report_json_schema(tmp_path):
     path = report.write_json(str(tmp_path / "report.json"))
     with open(path) as f:
         obj = json.load(f)
-    assert obj["version"] == 2  # v2 added lowered_records
+    assert obj["version"] == 3  # v2 added lowered_records, v3 traced_records
     assert obj["summary"]["FAIL"] == 0
     assert obj["lowered_records"] == []
+    assert obj["traced_records"] == []
     rec = obj["plan_records"][0]
     assert {"label", "family", "n", "k", "r", "failed", "status",
             "findings"} <= set(rec)
@@ -456,9 +458,19 @@ def test_run_check_cli_ast_only(tmp_path, capsys):
 
 
 def test_run_check_cli_self_test():
-    from tools.run_check import main
+    # the traced-layer self-test shard_maps over a (pod, node) mesh, so
+    # the CLI must run in a fresh interpreter where its XLA_FLAGS device
+    # override still applies (jax is already initialized in-process here)
+    import subprocess
+    import sys
 
-    assert main(["--self-test"]) == 0
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.run_check", "--self-test"],
+        capture_output=True, text=True, cwd=repo, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "self-test OK" in proc.stdout
 
 
 def test_run_check_cli_strict_warnings_gates_warn_only_run(tmp_path, capsys):

@@ -303,7 +303,7 @@ def test_lowered_record_json_roundtrip(tmp_path):
     path = report.write_json(str(tmp_path / "lowered.json"))
     with open(path) as f:
         obj = json.load(f)
-    assert obj["version"] == 2
+    assert obj["version"] == 3
     rec = obj["lowered_records"][0]
     assert {"label", "family", "artifact", "status", "findings",
             "info"} <= set(rec)

@@ -1,30 +1,43 @@
-"""CLI for ``repro.check``: plan sweep + lowered-layer analysis + AST lint.
+"""CLI for ``repro.check``: plan sweep + lowered + traced analysis + lint.
 
 Usage (from the repo root; ``src`` is added to ``sys.path`` automatically)::
 
-    python -m tools.run_check                  # full gate: all three layers
+    python -m tools.run_check                  # full gate: all four layers
     python -m tools.run_check --json out.json  # also write the report
     python -m tools.run_check --plans-only
     python -m tools.run_check --lowered-only   # SPMD/shard/Pallas analyzers
+    python -m tools.run_check --traced-only    # jaxpr/HLO dataflow analyzers
     python -m tools.run_check --ast-only
     python -m tools.run_check --strict-warnings  # WARNs also exit nonzero
     python -m tools.run_check --baseline tools/lowered_baseline.json
+    python -m tools.run_check --baseline tools/traced_baseline.json
     python -m tools.run_check --self-test      # mutation test: corrupted
                                                # artifacts must FAIL with
                                                # the owning rule id
 
 Exit code 0 iff nothing FAILed; with ``--strict-warnings`` a WARN-only
-run exits 1 too.  ``--baseline`` fails the run if the lowered sweep
-produced fewer records than the committed floor (a shrinking sweep means
-a family silently fell out of coverage).  This is the CI ``check``
-job's entry point.
+run exits 1 too.  ``--baseline`` fails the run if the lowered/traced
+sweep produced fewer records than the committed floor (a shrinking sweep
+means a family or entry point silently fell out of coverage).  This is
+the CI ``check`` job's entry point.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
+
+# The traced layer captures shard_map programs over a (pod, node) mesh;
+# on the CPU host platform XLA exposes one device unless told otherwise.
+# Must happen before jax initializes its backend — keep 16 in sync with
+# repro.check.traced.MAX_DEVICES.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=16"
+    ).strip()
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 if str(REPO_ROOT / "src") not in sys.path:
@@ -61,9 +74,20 @@ def _print_lowered_summary(report: CheckReport) -> None:
         print(f"{family:<16} {len(statuses):>7}  {worst}")
 
 
+def _print_traced_summary(report: CheckReport) -> None:
+    by_kind: dict[str, list[str]] = {}
+    for rec in report.traced_records:
+        by_kind.setdefault(rec.kind, []).append(rec.status)
+    print(f"{'traced kind':<16} {'records':>7}  status")
+    for kind, statuses in sorted(by_kind.items()):
+        worst = FAIL if FAIL in statuses else (WARN if WARN in statuses else "PASS")
+        print(f"{kind:<16} {len(statuses):>7}  {worst}")
+
+
 def _print_failures(report: CheckReport) -> None:
     for rec in (
-        *report.plan_records, *report.lowered_records, *report.lint_records
+        *report.plan_records, *report.lowered_records,
+        *report.traced_records, *report.lint_records,
     ):
         for f in rec.findings:
             if f.severity in (FAIL, WARN):
@@ -93,29 +117,56 @@ def run_self_test() -> int:
             mark = "caught"
         print(f"  {mutation:<26} -> {owner:<36} {mark}")
         ok &= caught and exclusive
-    total = len(results) + len(lowered)
+    print("traced self-test: corrupted traced programs must FAIL with "
+          "exactly the owning rule")
+    from repro.check.traced import self_test_traced
+
+    traced = self_test_traced()
+    for mutation, owner, caught, exclusive in traced:
+        if not caught:
+            mark = "MISSED"
+        elif not exclusive:
+            mark = "NOT-EXCLUSIVE"
+        else:
+            mark = "caught"
+        print(f"  {mutation:<26} -> {owner:<36} {mark}")
+        ok &= caught and exclusive
+    total = len(results) + len(lowered) + len(traced)
     if not ok:
         print("SELF-TEST FAILED: a deliberate defect went undetected "
               "(or was caught by the wrong rule)")
         return 1
     print(f"self-test OK: {total}/{total} mutations caught "
-          f"({len(lowered)} lowered-layer, each by exactly its owner)")
+          f"({len(lowered)} lowered-layer + {len(traced)} traced-layer, "
+          f"each by exactly its owner)")
     return 0
 
 
-def _check_baseline(report: CheckReport, path: str) -> int:
-    """0 iff the lowered sweep is at least as wide as the committed floor."""
+def _check_baseline(
+    report: CheckReport, path: str, *, lowered_ran: bool, traced_ran: bool
+) -> int:
+    """0 iff every swept layer is at least as wide as the committed floor."""
     with open(path) as f:
         baseline = json.load(f)
-    floor = int(baseline["min_lowered_records"])
-    got = len(report.lowered_records)
-    if got < floor:
-        print(f"BASELINE REGRESSION: lowered sweep produced {got} record(s), "
-              f"committed floor is {floor} ({path}) — a family fell out of "
-              f"coverage")
-        return 1
-    print(f"baseline OK: {got} lowered record(s) >= floor {floor}")
-    return 0
+    gates = []
+    if "min_lowered_records" in baseline and lowered_ran:
+        gates.append(("lowered", int(baseline["min_lowered_records"]),
+                      len(report.lowered_records)))
+    if "min_traced_records" in baseline and traced_ran:
+        gates.append(("traced", int(baseline["min_traced_records"]),
+                      len(report.traced_records)))
+    rc = 0
+    for layer, floor, got in gates:
+        if got < floor:
+            print(f"BASELINE REGRESSION: {layer} sweep produced {got} "
+                  f"record(s), committed floor is {floor} ({path}) — "
+                  f"coverage silently shrank")
+            rc = 1
+        else:
+            print(f"baseline OK: {got} {layer} record(s) >= floor {floor}")
+    if not gates:
+        print(f"baseline {path} has no floor for the layers that ran")
+    return rc
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -130,6 +181,8 @@ def main(argv: list[str] | None = None) -> int:
                     help="run only the plan sweep")
     ap.add_argument("--lowered-only", action="store_true",
                     help="run only the lowered-layer analyzers")
+    ap.add_argument("--traced-only", action="store_true",
+                    help="run only the traced-layer (jaxpr/HLO) analyzers")
     ap.add_argument("--ast-only", action="store_true",
                     help="run only the AST lint")
     ap.add_argument("--lint-root", default=str(REPO_ROOT / "src" / "repro"),
@@ -137,8 +190,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--strict-warnings", action="store_true",
                     help="exit nonzero when any record WARNs, not just FAILs")
     ap.add_argument("--baseline", metavar="PATH", default=None,
-                    help="JSON file with min_lowered_records; fail if the "
-                         "lowered sweep shrinks below it")
+                    help="JSON file with min_lowered_records and/or "
+                         "min_traced_records; fail if a sweep shrinks "
+                         "below its floor")
     ap.add_argument("--self-test", action="store_true",
                     help="run the mutation self-tests and exit")
     args = ap.parse_args(argv)
@@ -146,9 +200,12 @@ def main(argv: list[str] | None = None) -> int:
     if args.self_test:
         return run_self_test()
 
-    only_flags = [args.plans_only, args.lowered_only, args.ast_only]
+    only_flags = [
+        args.plans_only, args.lowered_only, args.traced_only, args.ast_only
+    ]
     if sum(only_flags) > 1:
-        ap.error("--plans-only/--lowered-only/--ast-only are exclusive")
+        ap.error("--plans-only/--lowered-only/--traced-only/--ast-only "
+                 "are exclusive")
     run_all = not any(only_flags)
 
     report = CheckReport()
@@ -162,6 +219,13 @@ def main(argv: list[str] | None = None) -> int:
               "Pallas kernel geometry")
         report.lowered_records = run_lowered_sweep()
         _print_lowered_summary(report)
+    if run_all or args.traced_only:
+        print("traced-layer analysis: jaxpr/HLO dataflow over the compiled "
+              "repair, kernel, serve and train programs")
+        from repro.check.traced import run_traced_sweep
+
+        report.traced_records = run_traced_sweep()
+        _print_traced_summary(report)
     if run_all or args.ast_only:
         print(f"AST lint: {args.lint_root}")
         report.lint_records = lint_tree(args.lint_root)
@@ -176,8 +240,12 @@ def main(argv: list[str] | None = None) -> int:
         report.write_json(args.json)
         print(f"report -> {args.json}")
     rc = 0 if report.ok else 1
-    if args.baseline and (run_all or args.lowered_only):
-        rc = max(rc, _check_baseline(report, args.baseline))
+    if args.baseline and (run_all or args.lowered_only or args.traced_only):
+        rc = max(rc, _check_baseline(
+            report, args.baseline,
+            lowered_ran=run_all or args.lowered_only,
+            traced_ran=run_all or args.traced_only,
+        ))
     if rc == 0 and args.strict_warnings and counts[WARN] > 0:
         print(f"--strict-warnings: {counts[WARN]} WARN record(s) gate the "
               f"run")
